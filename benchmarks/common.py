@@ -1,0 +1,77 @@
+"""Shared benchmark harness for the paper's §5 experiment grid.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
+contract): ``us_per_call`` is the per-query modeled response time in
+microseconds; ``derived`` carries auxiliary values (edge ratio, schedule
+ms, objective, ...) as ``k=v|k=v``.
+
+Sizes are scaled to this CPU container (graph ~20k triples vs the paper's
+100M+); the cost model and all *relative* trends are the paper's. See
+EXPERIMENTS.md for the mapping.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.cost import SystemParams
+from repro.edge.system import EdgeCloudSystem, RoundReport
+from repro.rdf.generator import generate_watdiv_like, workload_sparql
+from repro.sparql.query import parse_sparql
+
+POLICIES = ["cloud_only", "random", "edge_first", "greedy", "bnb"]
+
+
+@dataclass
+class Bench:
+    g: object
+    system: EdgeCloudSystem
+    queries: list
+
+
+def build_system(n_users: int = 20, n_edges: int = 4, scale: float = 2.0,
+                 storage_bytes: int = 400_000, f_ghz: float = 0.2,
+                 edge_mbps: float = 75.0, cloud_mbps: float = 5.0,
+                 seed: int = 0, history_per_user: int = 5,
+                 n_queries: int | None = None) -> Bench:
+    g = generate_watdiv_like(scale=scale, seed=seed)
+    params = SystemParams.synthetic(
+        n_users, n_edges, seed=seed + 1, edge_mbps=edge_mbps,
+        cloud_mbps=cloud_mbps, f_ghz=f_ghz)
+    system = EdgeCloudSystem(g.store, g.dictionary, params,
+                             storage_budgets=storage_bytes)
+    history = [workload_sparql(g, history_per_user, seed=1000 + n)
+               for n in range(n_users)]
+    system.prepare(history)
+    nq = n_queries if n_queries is not None else n_users
+    texts = workload_sparql(g, nq, seed=7777 + seed)
+    queries = [(i % n_users, parse_sparql(t, g.dictionary))
+               for i, t in enumerate(texts)]
+    return Bench(g=g, system=system, queries=queries)
+
+
+def run_policies(bench: Bench, policies: list[str] | None = None,
+                 execute: bool = True) -> dict[str, RoundReport]:
+    out = {}
+    for policy in (policies or POLICIES):
+        out[policy] = bench.system.run_round(
+            bench.queries, policy=policy, execute=execute, observe=False)
+    return out
+
+
+def emit(name: str, us_per_call: float, **derived) -> None:
+    d = "|".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{d}")
+
+
+def report_row(name: str, rep: RoundReport) -> None:
+    n = max(1, len(rep.outcomes))
+    edge_frac = 1.0 - rep.assignment_ratio.get(-1, 0.0)
+    emit(name,
+         rep.total_realized_latency / n * 1e6,
+         objective=f"{rep.objective:.3f}",
+         edge_ratio=f"{edge_frac:.2f}",
+         sched_ms=f"{rep.schedule_seconds * 1e3:.2f}")

@@ -1,0 +1,58 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report > artifacts/roofline_tables.md
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from .roofline import load_all
+
+
+def fmt_us(x: float) -> str:
+    return f"{x * 1e6:,.0f}"
+
+
+def main() -> None:
+    rows = load_all()
+    if not rows:
+        print("(run repro.launch.dryrun --all --mesh both first)")
+        return
+    from repro.configs.registry import skipped_cells
+
+    for mesh in ("single", "multi"):
+        sel = [r for r in rows if r["mesh"] == mesh]
+        n_fit = sum(r["fits_16GiB"] for r in sel)
+        print(f"\n### Mesh `{mesh}` "
+              f"({'16x16 = 256 chips' if mesh == 'single' else '2x16x16 = 512 chips'})"
+              f" — {len(sel)} cells compiled, {n_fit} fit 16 GiB HBM\n")
+        print("| arch | shape | compute (µs) | memory (µs) | collective (µs)"
+              " | dominant | MODEL/HLO | roofline frac | peak GB | fits |")
+        print("|---|---|---:|---:|---:|---|---:|---:|---:|---|")
+        for r in sorted(sel, key=lambda r: (r["arch"], r["shape"])):
+            print(f"| {r['arch']} | {r['shape']} | {fmt_us(r['t_compute'])} "
+                  f"| {fmt_us(r['t_memory'])} | {fmt_us(r['t_collective'])} "
+                  f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+                  f"| {r['roofline_frac']:.3f} | {r['peak_gb']:.2f} "
+                  f"| {'yes' if r['fits_16GiB'] else 'NO'} |")
+    print("\n### Skipped cells (per brief)\n")
+    for a, s, why in skipped_cells():
+        print(f"- `{a}` x `{s}`: {why}")
+
+    # collective-bound and worst-fraction cells (hillclimb candidates)
+    sel = [r for r in rows if r["mesh"] == "single"]
+    coll = sorted(sel, key=lambda r: -r["t_collective"]
+                  / max(r["t_compute"] + r["t_memory"], 1e-12))[:3]
+    worst = sorted(sel, key=lambda r: r["roofline_frac"])[:3]
+    print("\n### Hillclimb candidates (single mesh)\n")
+    print("most collective-bound:",
+          ", ".join(f"{r['arch']}x{r['shape']}" for r in coll))
+    print("worst roofline fraction:",
+          ", ".join(f"{r['arch']}x{r['shape']}" for r in worst))
+
+
+if __name__ == "__main__":
+    main()

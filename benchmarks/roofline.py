@@ -1,0 +1,145 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, three per-step terms in SECONDS:
+
+  compute    = HLO_FLOPs        / (peak FLOP/s per chip)
+  memory     = HLO_bytes        / (HBM bytes/s per chip)
+  collective = collective_bytes / (ICI bytes/s per chip)
+
+cost_analysis is PER-DEVICE after SPMD partitioning; while-loop (layer-scan)
+bodies are counted once, so LM cells apply the correction
+  total = module + (L - 1) x single-layer-probe
+to flops / bytes / collective bytes alike. MODEL_FLOPS uses 6·N·D (dense) or
+6·N_active·D (MoE) per *global* step divided over chips, and analytic
+per-family formulas for GNN / recsys; the ratio MODEL/HLO exposes remat and
+dispatch overheads.
+
+TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI (brief constants).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+LM_TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+             "decode_32k": 128, "long_500k": 1}
+
+
+def model_flops(arch: str, shape: str, n_chips: int) -> float:
+    """Analytic useful-FLOPs per step per chip."""
+    from repro.configs.registry import GNN_SHAPES, get_spec
+    spec = get_spec(arch)
+    if spec.family == "lm":
+        cfg = spec.config
+        n_active = cfg.active_param_count()
+        toks = LM_TOKENS[shape]
+        mult = 6.0 if shape == "train_4k" else 2.0   # fwd-only for serving
+        return mult * n_active * toks / n_chips
+    if spec.family == "gnn":
+        cfg = spec.config
+        sh = GNN_SHAPES[shape]
+        if sh["kind"] == "molecule":
+            N = sh["n_graphs"] * sh["nodes_per"]
+            E = sh["n_graphs"] * sh["edges_per"]
+        else:
+            N, E = sh["n_nodes"], sh["n_edges"]
+        h = cfg.d_hidden
+        d_in = sh.get("d_feat", h)
+        # per layer: edge MLP ~ (2h)*h*2 flops/edge + node transform h*h*2
+        per_layer = E * (4 * h * h) + N * (2 * h * h)
+        first = N * 2 * d_in * h
+        return 6.0 * (first + cfg.n_layers * per_layer) / n_chips  # train
+    cfg = spec.config
+    from repro.configs.registry import RECSYS_SHAPES
+    B = RECSYS_SHAPES[shape]["batch"]
+    d_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    dims = (d_in,) + cfg.mlp_dims
+    mlp = sum(dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+    fwd = B * 2 * mlp
+    if shape == "train_batch":
+        return 6.0 * B * mlp / n_chips
+    if shape == "retrieval_cand":
+        return (fwd + 2 * B * cfg.n_candidates * cfg.retrieval_dim) / n_chips
+    return fwd / n_chips
+
+
+def corrected(record: dict) -> dict:
+    """Apply the scan trip-count correction when a probe exists."""
+    f = record["flops"]
+    b = record["bytes_accessed"]
+    c = record["collectives"]["total_bytes"]
+    if record.get("probe"):
+        r = record["probe_repeat"]
+        f += r * record["probe"]["flops"]
+        b += r * record["probe"]["bytes_accessed"]
+        c += r * record["probe"]["collectives"]["total_bytes"]
+    # grad-accumulation scan body counted once too -> scale by microbatches
+    m = record.get("cost_multiplier", 1)
+    return {"flops": f * m, "bytes": b * m, "coll_bytes": c * m}
+
+
+def analyze_record(record: dict) -> dict | None:
+    if not record.get("ok"):
+        return None
+    n_chips = int(np.prod(record["mesh_shape"]))
+    tot = corrected(record)
+    t_compute = tot["flops"] / PEAK_FLOPS
+    t_memory = tot["bytes"] / HBM_BW
+    t_coll = tot["coll_bytes"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(record["arch"], record["shape"], n_chips)
+    t_model = mf / PEAK_FLOPS
+    return {
+        "arch": record["arch"], "shape": record["shape"],
+        "mesh": record["mesh"],
+        "t_compute": t_compute, "t_memory": t_memory,
+        "t_collective": t_coll, "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "useful_ratio": mf / max(tot["flops"], 1e-9),
+        "roofline_frac": t_model / max(bound, 1e-12),
+        "peak_gb": record["peak_bytes"] / 1e9,
+        "fits_16GiB": record["peak_bytes"] <= 16 * 2**30,
+    }
+
+
+def load_all(dryrun_dir: str = "artifacts/dryrun") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze_record(rec)
+        if row is not None:
+            rows.append(row)
+    return rows
+
+
+def main(quick: bool = True, mesh: str = "single") -> None:
+    rows = [r for r in load_all() if r["mesh"] == mesh]
+    if not rows:
+        print("roofline_no_data,0.0,run=repro.launch.dryrun --all first")
+        return
+    for r in rows:
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        print(f"{name},{r['t_compute'] * 1e6:.1f},"
+              f"mem_us={r['t_memory'] * 1e6:.1f}"
+              f"|coll_us={r['t_collective'] * 1e6:.1f}"
+              f"|dominant={r['dominant']}"
+              f"|roofline_frac={r['roofline_frac']:.3f}"
+              f"|useful={r['useful_ratio']:.2f}"
+              f"|peak_gb={r['peak_gb']:.2f}"
+              f"|fits={int(r['fits_16GiB'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""repro: cloud-edge collaborative SPARQL over large RDF graphs, in JAX.
+
+A production-grade reproduction + extension of:
+  "Efficient Cloud-edge Collaborative Approaches to SPARQL Queries over
+   Large RDF graphs" (Ma, Peng, Zhou, Ozsu, Zou, Chen; CS.DB 2026)
+
+Layers
+------
+- ``repro.rdf``      : dictionary-encoded triple store + synthetic generators
+- ``repro.sparql``   : BGP parser + vectorized homomorphism matcher
+- ``repro.core``     : pattern-induced subgraphs, DFS-code index, MINLP scheduler
+- ``repro.edge``     : edge/cloud servers + end-to-end system simulator
+- ``repro.models``   : LM / GNN / recsys model zoo (10 assigned architectures)
+- ``repro.kernels``  : Pallas TPU kernels (validated via interpret mode on CPU)
+- ``repro.runtime``  : train/serve loops, checkpointing, fault tolerance
+- ``repro.launch``   : production mesh + multi-pod dry-run drivers
+"""
+
+__version__ = "1.0.0"

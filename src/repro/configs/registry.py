@@ -1,0 +1,386 @@
+"""Architecture registry: 10 assigned archs x their shape grids.
+
+Each arch module exposes ``spec() -> ArchSpec``; the registry builds
+*cells* — (arch x shape) units with a step function, abstract inputs
+(ShapeDtypeStruct, no allocation) and in/out shardings — consumed by the
+dry-run driver, the roofline extractor and the smoke tests alike.
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.common import AxisRules
+from ..models.gnn import GNNConfig, gnn_init, gnn_loss
+from ..models.recsys import (RecsysConfig, init_recsys_params, recsys_loss,
+                             recsys_param_shardings, recsys_score,
+                             retrieval_topk)
+from ..models.transformer import (LMConfig, cache_shardings, init_kv_cache,
+                                  init_lm_params, lm_decode_step, lm_forward,
+                                  lm_loss, param_shardings)
+from ..optim.adamw import AdamWConfig, adamw_init
+from ..runtime.train_loop import make_train_step
+
+ARCH_IDS = [
+    "phi3.5-moe-42b-a6.6b", "granite-moe-1b-a400m", "qwen3-0.6b",
+    "qwen3-1.7b", "gemma2-2b",
+    "pna", "egnn", "gcn-cora", "nequip",
+    "wide-deep",
+]
+
+_MODULE_OF = {
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "granite-moe-1b-a400m": "granite_moe",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "gemma2-2b": "gemma2_2b",
+    "pna": "pna",
+    "egnn": "egnn",
+    "gcn-cora": "gcn_cora",
+    "nequip": "nequip",
+    "wide-deep": "wide_deep",
+}
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1, seq_shard=True),
+}
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(kind="full", n_nodes=2708, n_edges=10556,
+                          d_feat=1433),
+    "minibatch_lg": dict(kind="sampled", n_nodes=184320, n_edges=169984,
+                         d_feat=602, batch_nodes=1024, fanout=(15, 10)),
+    "ogb_products": dict(kind="full", n_nodes=2449029, n_edges=61859140,
+                         d_feat=100),
+    "molecule": dict(kind="molecule", n_graphs=128, nodes_per=30,
+                     edges_per=64),
+}
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="score", batch=512),
+    "serve_bulk": dict(kind="score", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_candidates=1_000_000),
+}
+
+
+@dataclass
+class ArchSpec:
+    arch_id: str
+    family: str                      # lm | gnn | recsys
+    config: object
+    skip_shapes: dict[str, str] = field(default_factory=dict)
+    source: str = ""
+    microbatches: int = 1            # grad-accumulation factor for train cells
+
+    @property
+    def shapes(self) -> dict:
+        table = {"lm": LM_SHAPES, "gnn": GNN_SHAPES,
+                 "recsys": RECSYS_SHAPES}[self.family]
+        return {k: v for k, v in table.items() if k not in self.skip_shapes}
+
+
+def get_spec(arch_id: str) -> ArchSpec:
+    mod = importlib.import_module(f"repro.configs.{_MODULE_OF[arch_id]}")
+    return mod.spec()
+
+
+def all_cells() -> list[tuple[str, str]]:
+    cells = []
+    for a in ARCH_IDS:
+        s = get_spec(a)
+        cells.extend((a, shape) for shape in s.shapes)
+    return cells
+
+
+def skipped_cells() -> list[tuple[str, str, str]]:
+    out = []
+    for a in ARCH_IDS:
+        s = get_spec(a)
+        out.extend((a, shape, why) for shape, why in s.skip_shapes.items())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell construction (dry-run + smoke share this)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Cell:
+    fn: Callable                # jit-able step function
+    abstract_args: tuple        # ShapeDtypeStructs (params, opt, batch, ...)
+    in_shardings: tuple
+    out_shardings: object       # None -> let GSPMD choose
+    # scan-body probe for roofline correction: (fn, abstract args, n_repeat)
+    probe: tuple | None = None
+    description: str = ""
+    # grad-accumulation scan bodies are ALSO counted once by cost_analysis;
+    # roofline totals scale by this factor (== microbatches)
+    cost_multiplier: int = 1
+
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _pad_to(n: int, m: int = 512) -> int:
+    """Data-pipeline padding: sharded leading dims need divisibility by the
+    batch-axis product (32 on the multi-pod mesh); 512 also keeps TPU lane
+    alignment."""
+    return ((n + m - 1) // m) * m
+
+
+def _batch_dim_spec(mesh, rules, dim: int):
+    """Shard a leading dim over the batch axes when divisible, else
+    replicate (e.g. batch=1 retrieval / long-context decode)."""
+    total = 1
+    for ax in rules.batch:
+        total *= mesh.shape[ax]
+    return rules.batch if dim % total == 0 else None
+
+
+def _opt_cfg() -> AdamWConfig:
+    return AdamWConfig(peak_lr=3e-4, warmup_steps=100, total_steps=10_000)
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def build_cell(spec: ArchSpec, shape_name: str, mesh) -> Cell:
+    rules = AxisRules.for_mesh(mesh)
+    if spec.family == "lm":
+        return _lm_cell(spec, shape_name, mesh, rules)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, shape_name, mesh, rules)
+    return _recsys_cell(spec, shape_name, mesh, rules)
+
+
+# -- LM ----------------------------------------------------------------------
+
+def _lm_cell(spec: ArchSpec, shape_name: str, mesh, rules) -> Cell:
+    cfg: LMConfig = spec.config
+    sh = LM_SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    key = jax.random.PRNGKey(0)
+    params = _abstract(lambda k: init_lm_params(cfg, k), key)
+    p_spec = param_shardings(cfg, rules)
+    p_named = _named(mesh, p_spec)
+    batch_spec = NamedSharding(mesh, P(_batch_dim_spec(mesh, rules, B), None))
+
+    if sh["kind"] == "train":
+        opt = _abstract(adamw_init, params)
+        o_named = {"m": p_named, "v": p_named,
+                   "step": NamedSharding(mesh, P())}
+        loss_fn = partial_loss(cfg, rules)
+        mb = spec.microbatches
+        step = make_train_step(loss_fn, _opt_cfg(), microbatches=mb)
+        if mb > 1:
+            tokens = jax.ShapeDtypeStruct((mb, B // mb, S), jnp.int32)
+            batch_spec = NamedSharding(
+                mesh, P(None, _batch_dim_spec(mesh, rules, B // mb), None))
+            bprobe = B // mb
+        else:
+            tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            bprobe = B
+        probe = _lm_probe(cfg, rules, bprobe, S, mesh, train=True)
+        return Cell(fn=step, abstract_args=(params, opt, tokens),
+                    in_shardings=(p_named, o_named, batch_spec),
+                    out_shardings=None, probe=probe,
+                    description=f"train_step B={B} S={S} mb={mb}",
+                    cost_multiplier=mb)
+
+    if sh["kind"] == "prefill":
+        def fwd(params, tokens):
+            logits, _ = lm_forward(cfg, params, tokens, rules)
+            return logits
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        probe = _lm_probe(cfg, rules, B, S, mesh, train=False)
+        return Cell(fn=fwd, abstract_args=(params, tokens),
+                    in_shardings=(p_named, batch_spec), out_shardings=None,
+                    probe=probe, description=f"prefill B={B} S={S}")
+
+    # decode
+    seq_shard = sh.get("seq_shard", False)
+    cache = _abstract(lambda: init_kv_cache(cfg, B, S))
+    c_named = _named(mesh, cache_shardings(cfg, rules, seq_shard=seq_shard))
+
+    def decode(params, cache, tokens, pos):
+        return lm_decode_step(cfg, params, cache, tokens, pos, rules)
+
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return Cell(fn=decode, abstract_args=(params, cache, tokens, pos),
+                in_shardings=(p_named, c_named, batch_spec,
+                              NamedSharding(mesh, P())),
+                out_shardings=None,
+                description=f"serve_step B={B} cache={S}")
+
+
+def partial_loss(cfg, rules):
+    def loss_fn(params, tokens):
+        return lm_loss(cfg, params, tokens, rules)
+    return loss_fn
+
+
+def _lm_probe(cfg: LMConfig, rules, B, S, mesh, train: bool):
+    """Single-layer probe: measures scan-body cost once for the roofline
+    correction total = module + (L-1) * probe."""
+    from ..models.transformer import _layer
+    lcfg = cfg
+    key = jax.random.PRNGKey(0)
+    full = _abstract(lambda k: init_lm_params(lcfg, k), key)
+    layer0 = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                          full["layers"])
+    x = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    window = jax.ShapeDtypeStruct((), jnp.int32)
+    x_spec = NamedSharding(mesh, P(rules.batch, None, None))
+    lp_spec = _named(mesh, param_shardings(lcfg, rules)["layers"])
+    lp_spec = jax.tree.map(
+        lambda s: NamedSharding(mesh, P(*s.spec[1:])), lp_spec)
+
+    if train:
+        def probe_fn(lp, x, window):
+            def f(lp, x):
+                positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+                out, aux = _layer(lcfg, lp, x, window, positions, rules)
+                return jnp.mean(out.astype(jnp.float32))
+            val, grads = jax.value_and_grad(f, argnums=(0, 1))(lp, x)
+            return val, grads
+    else:
+        def probe_fn(lp, x, window):
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+            out, aux = _layer(lcfg, lp, x, window, positions, rules)
+            return out
+    return (probe_fn, (layer0, x, window),
+            (lp_spec, x_spec, NamedSharding(mesh, P())),
+            cfg.n_layers - 1)
+
+
+# -- GNN ----------------------------------------------------------------------
+
+def _gnn_batch_struct(cfg: GNNConfig, sh: dict):
+    if sh["kind"] == "molecule":
+        N = sh["n_graphs"] * sh["nodes_per"]
+        E = sh["n_graphs"] * sh["edges_per"]
+        G = sh["n_graphs"]
+    else:
+        N, E, G = sh["n_nodes"], sh["n_edges"], 1
+    N, E = _pad_to(N), _pad_to(E)   # pipeline pads to shardable sizes
+    ei = jax.ShapeDtypeStruct((E, 2), jnp.int32)
+    if cfg.model in ("gcn", "pna"):
+        d_feat = sh.get("d_feat", cfg.d_feat)
+        return {
+            "feat": jax.ShapeDtypeStruct((N, d_feat), jnp.float32),
+            "edge_index": ei,
+            "labels": jax.ShapeDtypeStruct((N,), jnp.int32),
+            "label_mask": jax.ShapeDtypeStruct((N,), jnp.float32),
+        }
+    return {
+        "species": jax.ShapeDtypeStruct((N,), jnp.int32),
+        "coords": jax.ShapeDtypeStruct((N, 3), jnp.float32),
+        "edge_index": ei,
+        "graph_ids": jax.ShapeDtypeStruct((N,), jnp.int32),
+        "energy": jax.ShapeDtypeStruct((G,), jnp.float32),
+    }
+
+
+def _gnn_cell(spec: ArchSpec, shape_name: str, mesh, rules) -> Cell:
+    cfg: GNNConfig = spec.config
+    sh = dict(GNN_SHAPES[shape_name])
+    if cfg.model in ("gcn", "pna") and sh["kind"] == "molecule":
+        sh["d_feat"] = cfg.n_species      # one-hot species as features
+    # gcn/pna configs pin d_feat per dataset shape
+    key = jax.random.PRNGKey(0)
+    dcfg = cfg
+    if cfg.model in ("gcn", "pna"):
+        dcfg = GNNConfig(**{**cfg.__dict__,
+                            "d_feat": sh.get("d_feat", cfg.d_feat)})
+    params = _abstract(lambda k: gnn_init(dcfg, k), key)
+    opt = _abstract(adamw_init, params)
+    batch = _gnn_batch_struct(dcfg, sh)
+
+    def loss_fn(params, batch):
+        return gnn_loss(dcfg, params, batch, rules)
+
+    step = make_train_step(loss_fn, _opt_cfg())
+    # vertex-partitioned DistGNN schedule: edges AND node arrays shard over
+    # the batch axes; mp_aggregate psum_scatters edge partials back to the
+    # node shards (params replicated — they are tiny)
+    repl = NamedSharding(mesh, P())
+    batch_sh = {}
+    for k, v in batch.items():
+        if k == "energy":
+            batch_sh[k] = repl
+        else:
+            ax = _batch_dim_spec(mesh, rules, v.shape[0])
+            batch_sh[k] = NamedSharding(
+                mesh, P(ax, *([None] * (v.ndim - 1))))
+    p_sh = jax.tree.map(lambda _: repl, params)
+    o_sh = {"m": p_sh, "v": p_sh, "step": repl}
+    return Cell(fn=step, abstract_args=(params, opt, batch),
+                in_shardings=(p_sh, o_sh, batch_sh), out_shardings=None,
+                description=f"gnn train {shape_name}")
+
+
+# -- recsys ---------------------------------------------------------------------
+
+def _recsys_cell(spec: ArchSpec, shape_name: str, mesh, rules) -> Cell:
+    cfg: RecsysConfig = spec.config
+    sh = RECSYS_SHAPES[shape_name]
+    B = sh["batch"]
+    key = jax.random.PRNGKey(0)
+    params = _abstract(lambda k: init_recsys_params(cfg, k), key)
+    p_named = _named(mesh, recsys_param_shardings(cfg, rules))
+    bspec = {
+        "ids": jax.ShapeDtypeStruct((B, cfg.n_sparse, cfg.nnz_per_field),
+                                    jnp.int32),
+        "id_mask": jax.ShapeDtypeStruct((B, cfg.n_sparse, cfg.nnz_per_field),
+                                        jnp.float32),
+        "dense": jax.ShapeDtypeStruct((B, cfg.n_dense), jnp.float32),
+    }
+    bax = _batch_dim_spec(mesh, rules, B)
+    b_named = {
+        "ids": NamedSharding(mesh, P(bax, None, None)),
+        "id_mask": NamedSharding(mesh, P(bax, None, None)),
+        "dense": NamedSharding(mesh, P(bax, None)),
+    }
+    if sh["kind"] == "train":
+        bspec["labels"] = jax.ShapeDtypeStruct((B,), jnp.float32)
+        b_named["labels"] = NamedSharding(mesh, P(rules.batch))
+        opt = _abstract(adamw_init, params)
+        o_named = {"m": p_named, "v": p_named,
+                   "step": NamedSharding(mesh, P())}
+
+        def loss_fn(params, batch):
+            return recsys_loss(cfg, params, batch, rules)
+        step = make_train_step(loss_fn, _opt_cfg())
+        return Cell(fn=step, abstract_args=(params, opt, bspec),
+                    in_shardings=(p_named, o_named, b_named),
+                    out_shardings=None,
+                    description=f"recsys train B={B}")
+    if sh["kind"] == "score":
+        def fn(params, batch):
+            return recsys_score(cfg, params, batch, rules)
+        return Cell(fn=fn, abstract_args=(params, bspec),
+                    in_shardings=(p_named, b_named), out_shardings=None,
+                    description=f"recsys score B={B}")
+
+    def fn(params, batch):
+        return retrieval_topk(cfg, params, batch, rules, k=100)
+    return Cell(fn=fn, abstract_args=(params, bspec),
+                in_shardings=(p_named, b_named), out_shardings=None,
+                description=f"retrieval B={B} C={cfg.n_candidates}")

@@ -1,0 +1,93 @@
+"""Pattern selection + dynamic placement for edge servers (paper §3.2).
+
+Storage-aware selection: choosing which pattern-induced subgraphs an edge
+server hosts is a knapsack (benefit = access frequency, cost = subgraph
+bytes); the paper uses a lightweight greedy heuristic — benefit/cost ratio
+with a frequency tiebreak.
+
+Dynamic update: the system tracks per-pattern access frequencies; patterns
+hot in the cloud but absent at an edge are added, cold ones evicted, as an
+asynchronous background task (here: an explicit ``rebalance()`` the driver
+calls between scheduling rounds, keeping query latency unaffected).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..rdf.graph import TripleStore
+from .induced import induced_subgraph
+from .pattern import Pattern
+
+
+@dataclass
+class PatternProfile:
+    pattern: Pattern
+    frequency: float          # accesses (decayed)
+    size_bytes: int           # |G[{p}]| storage cost
+
+
+def greedy_knapsack(profiles: list[PatternProfile],
+                    budget_bytes: int) -> list[int]:
+    """Indices of selected patterns under the budget (benefit/cost greedy)."""
+    order = sorted(
+        range(len(profiles)),
+        key=lambda i: (-(profiles[i].frequency
+                         / max(1, profiles[i].size_bytes)),
+                       -profiles[i].frequency, i))
+    chosen: list[int] = []
+    used = 0
+    for i in order:
+        sz = profiles[i].size_bytes
+        if used + sz <= budget_bytes:
+            chosen.append(i)
+            used += sz
+    return sorted(chosen)
+
+
+@dataclass
+class DynamicPlacement:
+    """Frequency-tracking placement policy for one edge server."""
+
+    budget_bytes: int
+    decay: float = 0.9                  # per-round exponential decay
+    freq: dict[tuple, float] = field(default_factory=dict)
+    sizes: dict[tuple, int] = field(default_factory=dict)
+    patterns: dict[tuple, Pattern] = field(default_factory=dict)
+    resident: set[tuple] = field(default_factory=set)
+
+    def observe(self, p: Pattern, count: float = 1.0) -> None:
+        """Record accesses for a pattern (edge- or cloud-served)."""
+        if not p.indexable:
+            return
+        k = p.key
+        self.freq[k] = self.freq.get(k, 0.0) + count
+        self.patterns.setdefault(k, p)
+
+    def set_size(self, p: Pattern, size_bytes: int) -> None:
+        self.sizes[p.key] = int(size_bytes)
+
+    def decay_round(self) -> None:
+        for k in list(self.freq):
+            self.freq[k] *= self.decay
+
+    def rebalance(self) -> tuple[list[Pattern], list[Pattern]]:
+        """Recompute residency; returns (added, evicted) patterns.
+
+        Patterns without a measured size are skipped (size is measured by the
+        server when it first materializes G[{p}]).
+        """
+        known = [k for k in self.freq if k in self.sizes]
+        profiles = [PatternProfile(self.patterns[k], self.freq[k],
+                                   self.sizes[k]) for k in known]
+        chosen = set(known[i] for i in greedy_knapsack(
+            profiles, self.budget_bytes))
+        added = [self.patterns[k] for k in chosen - self.resident]
+        evicted = [self.patterns[k] for k in self.resident - chosen]
+        self.resident = chosen
+        return added, evicted
+
+    def used_bytes(self) -> int:
+        return sum(self.sizes.get(k, 0) for k in self.resident)

@@ -1,0 +1,137 @@
+"""R-QAD: convex relaxation of the query-assignment problem, in JAX.
+
+Paper §4.4 relaxes D ∈ {0,1} to [0,1] (Eq. 16) and solves the resulting
+convex program with Gurobi. Here the solver is accelerator-native:
+
+- projected gradient with Nesterov acceleration, fully ``jit``-compiled;
+- the feasible set  {d ∈ [0,1]^K : Σ_{k: e_nk=1} d_k ≤ 1}  is handled by an
+  exact per-row projection (bisection on the simplex dual variable),
+  vectorized over all rows;
+- a **certified lower bound** is returned via the Frank-Wolfe duality gap:
+  for convex f and any feasible x,  min f ≥ f(x) + min_{y∈C} ∇f(x)·(y−x),
+  and the linear minimum over C is available in closed form (per row: either
+  0 or the single most negative gradient coordinate). B&B pruning therefore
+  never relies on the iterative solver having fully converged.
+- ``solve_rqad_batch`` evaluates a whole branch-and-bound frontier in one
+  vmapped call (beyond-paper optimization; see EXPERIMENTS.md §Perf-sched).
+
+Objective (constant cloud term excluded; callers add it):
+
+    f(D) = Σ_k (Σ_n D_nk A_nk)² / F_k + Σ_nk D_nk b_nk
+    A_nk = e_nk √c_n ,   b_nk = e_nk (w_n/r^{n,k} − w_n/r^{n,c})
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def build_qad_arrays(c: np.ndarray, w: np.ndarray, e: np.ndarray,
+                     r_edge: np.ndarray, r_cloud: np.ndarray,
+                     ) -> tuple[np.ndarray, np.ndarray, float]:
+    """(A, b, const) for the objective above. Arrays are [N, K]."""
+    A = e * np.sqrt(np.maximum(c, 0.0))[:, None]
+    with np.errstate(divide="ignore"):
+        edge_tx = np.where(e > 0, w[:, None] / np.maximum(r_edge, 1e-30), 0.0)
+    b = e * (edge_tx - (w / r_cloud)[:, None])
+    const = float((w / r_cloud).sum())
+    return A.astype(np.float64), b.astype(np.float64), const
+
+
+def _project_rows(x: jnp.ndarray, e: jnp.ndarray,
+                  n_bisect: int = 40) -> jnp.ndarray:
+    """Project rows of x onto {d ∈ [0,1]^K : Σ_{k:e=1} d_k ≤ 1}."""
+    x = jnp.where(e > 0, x, 0.0)
+    y = jnp.clip(x, 0.0, 1.0)
+    s = y.sum(axis=-1)
+    lo = jnp.zeros(x.shape[:-1], x.dtype)
+    hi = jnp.maximum(jnp.max(x, axis=-1), 0.0)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        val = jnp.clip(x - mid[..., None], 0.0, 1.0).sum(axis=-1)
+        gt = val > 1.0
+        return jnp.where(gt, mid, lo), jnp.where(gt, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, n_bisect, body, (lo, hi))
+    z = jnp.clip(x - hi[..., None], 0.0, 1.0)
+    return jnp.where((s <= 1.0)[..., None], y, z)
+
+
+def _objective(D_eff: jnp.ndarray, A: jnp.ndarray, b: jnp.ndarray,
+               F: jnp.ndarray) -> jnp.ndarray:
+    S = (D_eff * A).sum(axis=0)
+    return (S * S / F).sum() + (D_eff * b).sum()
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def solve_rqad(A: jnp.ndarray, b: jnp.ndarray, F: jnp.ndarray,
+               e: jnp.ndarray, fixed_mask: jnp.ndarray,
+               fixed_D: jnp.ndarray, iters: int = 300,
+               ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Minimize f over free rows; fixed rows are pinned to ``fixed_D``.
+
+    Returns (D_relaxed [N,K], objective value, certified lower bound) —
+    both values EXCLUDE the constant cloud term.
+    """
+    free = (1.0 - fixed_mask)[:, None] * e          # [N,K] optimizable coords
+
+    def eff(x):
+        return jnp.where(fixed_mask[:, None] > 0, fixed_D, x * free)
+
+    def grad(x):
+        D_eff = eff(x)
+        S = (D_eff * A).sum(axis=0)
+        return (2.0 * A * (S / F)[None, :] + b) * free
+
+    # Lipschitz bound for the quadratic part over the free subspace
+    L = 2.0 * jnp.max((A * A).sum(axis=0) / F) + 1e-12
+    step = 1.0 / L
+
+    x0 = _project_rows(jnp.full_like(A, 0.5) * free, e) * free
+
+    def body(t, carry):
+        x, x_prev = carry
+        beta = t / (t + 3.0)
+        y = x + beta * (x - x_prev)
+        x_new = _project_rows(y - step * grad(y), e) * free
+        return x_new, x
+
+    x, _ = jax.lax.fori_loop(0, iters, body, (x0, x0))
+    x = _project_rows(x, e) * free
+    D_eff = eff(x)
+    f_val = _objective(D_eff, A, b, F)
+
+    # Frank-Wolfe certificate: f* >= f(x) + min_{y in C} g·(y - x)
+    g = grad(x)
+    g_masked = jnp.where(free > 0, g, jnp.inf)
+    row_min = jnp.min(g_masked, axis=1)             # best single coordinate
+    row_lin_min = jnp.minimum(row_min, 0.0)         # or the origin
+    row_lin_min = jnp.where(jnp.isfinite(row_lin_min), row_lin_min, 0.0)
+    gap = (row_lin_min - (g * x).sum(axis=1)) * (1.0 - fixed_mask)
+    lb = f_val + gap.sum()
+    return D_eff, f_val, lb
+
+
+# One relaxation per child node of a B&B branching step, in a single call.
+solve_rqad_batch = jax.jit(
+    jax.vmap(solve_rqad, in_axes=(None, None, None, None, None, 0, None)),
+    static_argnames=("iters",))
+
+
+def round_relaxed(D_relaxed: np.ndarray, e: np.ndarray) -> np.ndarray:
+    """Eq. (17) rounding, kept feasible: at most one 1 per row (argmax wins
+    when several coordinates tie at >= 0.5, which the simplex constraint
+    otherwise forbids only strictly)."""
+    D = np.asarray(D_relaxed)
+    out = np.zeros_like(D)
+    best = D.argmax(axis=1)
+    take = D[np.arange(D.shape[0]), best] >= 0.5
+    rows = np.arange(D.shape[0])[take]
+    out[rows, best[take]] = 1.0
+    return out * (e > 0)

@@ -1,0 +1,123 @@
+"""Edge and cloud servers.
+
+An edge server hosts pattern-induced subgraphs for a resident pattern set
+(selected under its storage budget) plus the hash-code pattern index used for
+O(1) executability checks. The cloud hosts the full graph.
+
+Both execute queries with the same vectorized matcher — the paper's
+completeness guarantee (matches over G[P] == matches over G for queries
+isomorphic to a resident pattern) is what makes edge execution correct, and
+is asserted in tests/test_edge_system.py.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.induced import induced_edge_ids
+from ..core.pattern import Pattern, PatternIndex, pattern_of
+from ..core.placement import DynamicPlacement
+from ..rdf.graph import TripleStore
+from ..sparql.matcher import MatchResult, match_bgp
+from ..sparql.query import QueryGraph
+
+
+@dataclass
+class ExecutionRecord:
+    n_matches: int
+    wall_seconds: float
+    result_bits: float
+
+
+class CloudServer:
+    """Holds the complete RDF graph G."""
+
+    def __init__(self, store: TripleStore) -> None:
+        self.store = store
+
+    def execute(self, q: QueryGraph) -> tuple[MatchResult, ExecutionRecord]:
+        t0 = time.perf_counter()
+        res = match_bgp(self.store, q)
+        dt = time.perf_counter() - t0
+        return res, ExecutionRecord(res.num_matches, dt,
+                                    res.result_bytes(q.projection) * 8)
+
+
+class EdgeServer:
+    """Stores pattern-induced subgraphs G[P] + the pattern index."""
+
+    def __init__(self, server_id: int, storage_budget_bytes: int,
+                 compute_cycles_per_s: float) -> None:
+        self.server_id = server_id
+        self.budget = int(storage_budget_bytes)
+        self.F = float(compute_cycles_per_s)
+        self.placement = DynamicPlacement(budget_bytes=self.budget)
+        self.index = PatternIndex()
+        self.store: TripleStore | None = None
+        self._resident: dict[tuple, Pattern] = {}
+        self._edge_ids: dict[tuple, np.ndarray] = {}
+
+    # -- deployment ---------------------------------------------------------
+    def measure_pattern(self, cloud_store: TripleStore, p: Pattern,
+                        size_cache: dict[tuple, tuple] | None = None) -> int:
+        """Compute |G[{p}]| bytes (cached across servers by pattern key)."""
+        if size_cache is not None and p.key in size_cache:
+            eids, nbytes = size_cache[p.key]
+        else:
+            eids = induced_edge_ids(cloud_store, [p])
+            nbytes = int(len(eids) * 3 * 8 * 1.25)
+            if size_cache is not None:
+                size_cache[p.key] = (eids, nbytes)
+        self._edge_ids[p.key] = eids
+        self.placement.set_size(p, nbytes)
+        return nbytes
+
+    def deploy(self, cloud_store: TripleStore,
+               patterns: list[Pattern]) -> None:
+        """Materialize G[P] for the given resident set."""
+        self._resident = {p.key: p for p in patterns if p.indexable}
+        self.index = PatternIndex()
+        all_eids = [self._edge_ids[k] for k in self._resident
+                    if k in self._edge_ids]
+        eids = (np.unique(np.concatenate(all_eids)) if all_eids
+                else np.zeros(0, dtype=np.int64))
+        self.store = cloud_store.subgraph(eids)
+        for p in self._resident.values():
+            self.index.add(p, self.server_id)
+        self.placement.resident = set(self._resident)
+
+    def rebalance(self, cloud_store: TripleStore,
+                  size_cache: dict | None = None) -> tuple[int, int]:
+        """Dynamic update (paper §3.2): apply the placement policy.
+
+        Returns (n_added, n_evicted). Asynchronous in the paper; callers run
+        it between scheduling rounds.
+        """
+        # ensure sizes are known for all observed patterns
+        for k, p in self.placement.patterns.items():
+            if k not in self.placement.sizes:
+                self.measure_pattern(cloud_store, p, size_cache)
+        added, evicted = self.placement.rebalance()
+        if added or evicted:
+            self.deploy(cloud_store,
+                        [self.placement.patterns[k]
+                         for k in self.placement.resident])
+        return len(added), len(evicted)
+
+    # -- query path ----------------------------------------------------------
+    def can_execute(self, q_pattern: Pattern) -> bool:
+        return bool(self.index.lookup(q_pattern))
+
+    def execute(self, q: QueryGraph) -> tuple[MatchResult, ExecutionRecord]:
+        assert self.store is not None, "edge server has no deployed data"
+        t0 = time.perf_counter()
+        res = match_bgp(self.store, q)
+        dt = time.perf_counter() - t0
+        return res, ExecutionRecord(res.num_matches, dt,
+                                    res.result_bytes(q.projection) * 8)
+
+    def used_bytes(self) -> int:
+        return self.store.size_bytes() if self.store is not None else 0

@@ -1,0 +1,119 @@
+"""Flash-decode attention (Pallas TPU): one query vs a long KV cache.
+
+Decode is memory-bound: the whole cache streams HBM -> VMEM once per step.
+Grid = (batch * q_heads, S/bk) with the kv axis innermost/sequential; the
+online-softmax state (m, l, acc) lives in VMEM scratch, exactly the
+FlashDecoding split-K pattern collapsed onto the sequential TPU grid.
+Variable per-sequence lengths arrive via scalar prefetch
+(PrefetchScalarGridSpec) so masking needs no [B, S] tensor.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                   softcap: float, bk: int, n_kv_blocks: int, n_heads: int):
+    i = pl.program_id(0)          # b * H + h
+    kj = pl.program_id(1)
+    b = i // n_heads
+    length = lengths_ref[b]
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    lo = kj * bk
+    block_live = lo < length
+    if window > 0:
+        block_live &= (lo + bk) > (length - window)
+
+    @pl.when(block_live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # [1, d]
+        k = k_ref[0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap     # [1, bk]
+        kpos = lo + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        valid = kpos < length
+        if window > 0:
+            valid &= kpos >= (length - window)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "bk", "interpret"))
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, lengths: jnp.ndarray,
+                     window: int = 0, softcap: float = 0.0, bk: int = 128,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q [B,H,d]; caches [B,Hkv,S,d]; lengths [B] valid prefix sizes."""
+    B, H, d = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    bk = min(bk, S)
+    assert S % bk == 0
+    nk = S // bk
+    scale = d ** -0.5
+
+    qf = q.reshape(B * H, 1, d)
+    kf = k_cache.reshape(B * Hkv, S, d)
+    vf = v_cache.reshape(B * Hkv, S, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda i, kj, L: (i, 0, 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda i, kj, L: ((i // H) * Hkv + (i % H) // G,
+                                           kj, 0)),
+            pl.BlockSpec((1, bk, d),
+                         lambda i, kj, L: ((i // H) * Hkv + (i % H) // G,
+                                           kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, kj, L: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, window=window,
+                          softcap=softcap, bk=bk, n_kv_blocks=nk,
+                          n_heads=H),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, d), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qf, kf, vf)
+    return out.reshape(B, H, d)

@@ -1,0 +1,76 @@
+"""EmbeddingBag (Pallas TPU): scalar-prefetched row streaming + bag reduce.
+
+The canonical TPU embedding pattern: the (huge) table stays in HBM; the ids
+are **scalar-prefetched** so each grid step's BlockSpec ``index_map`` selects
+exactly the table row the step needs — the DMA engine streams only touched
+rows into VMEM (no [B*F*NNZ, D] gather buffer ever exists).
+
+Grid = (B, F, NNZ) with the bag axis innermost; a VMEM scratch accumulates
+the masked bag sum, divided by the live count on the last entry (mean) —
+``nn.EmbeddingBag`` semantics with multi-hot masks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(ids_ref, mask_ref, row_ref, o_ref, acc_scr, cnt_scr, *,
+                nnz: int, combiner: str):
+    b = pl.program_id(0)
+    f = pl.program_id(1)
+    z = pl.program_id(2)
+
+    @pl.when(z == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        cnt_scr[...] = jnp.zeros_like(cnt_scr)
+
+    m = mask_ref[b, f, z].astype(jnp.float32)
+    acc_scr[...] += row_ref[...].astype(jnp.float32) * m
+    cnt_scr[...] += m
+
+    @pl.when(z == nnz - 1)
+    def _finalize():
+        if combiner == "sum":
+            o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+        else:
+            denom = jnp.maximum(cnt_scr[0], 1.0)
+            o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("combiner", "interpret"))
+def embedding_bag_pallas(table: jnp.ndarray, ids: jnp.ndarray,
+                         mask: jnp.ndarray, combiner: str = "mean",
+                         interpret: bool = False) -> jnp.ndarray:
+    """table [V, D]; ids/mask [B, F, NNZ] -> bags [B, F, D]."""
+    B, F, NNZ = ids.shape
+    V, D = table.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # ids, mask
+        grid=(B, F, NNZ),
+        in_specs=[
+            # stream exactly the addressed table row for this (b, f, z)
+            pl.BlockSpec((1, D), lambda b, f, z, ids_ref, mask_ref:
+                         (ids_ref[b, f, z], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D),
+                               lambda b, f, z, ids_ref, mask_ref: (b, f, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_bag_kernel, nnz=NNZ, combiner=combiner),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, F, D), table.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), mask.astype(jnp.float32), table)
+    return out

@@ -1,0 +1,114 @@
+"""GNN segment-sum message passing (Pallas TPU): scatter as one-hot matmul.
+
+The message-passing primitive ``out[n] = Σ_{e: dst[e]==n} msg[e]`` is a
+scatter — hostile to the MXU as pointer chasing, friendly as a matmul:
+for an edge chunk C and node block N_b,
+
+    out[N_b] += onehot(dst_chunk - base)^T  @  msg_chunk      (MXU GEMM)
+
+Edges arrive **sorted by destination** (the framework sorts once per graph),
+so each node block touches a contiguous edge range, delivered via scalar-
+prefetched CSR offsets; the grid walks (node_block, edge_chunk) with the
+chunk axis innermost and an accumulator in VMEM scratch.
+
+This is the FeatGraph/GE-SpMM gather-GEMM-scatter schedule adapted to the
+TPU memory hierarchy (see DESIGN.md §Hardware-adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _segmp_kernel(starts_ref, msg_ref, dst_ref, o_ref, acc_scr, *,
+                  bn: int, bc: int, n_chunks: int):
+    ni = pl.program_id(0)          # node block
+    cj = pl.program_id(1)          # edge chunk (within this node block range)
+
+    @pl.when(cj == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    base = ni * bn
+    lo = starts_ref[ni]            # first edge of this node block
+    hi = starts_ref[ni + 1]
+    # BlockSpec streams bc-ALIGNED chunks; the block's range may start
+    # mid-chunk, so mask positions outside [lo, hi) explicitly.
+    aligned = ((lo + cj * bc) // bc) * bc
+
+    @pl.when(aligned < hi)
+    def _body():
+        msg = msg_ref[...].astype(jnp.float32)          # [bc, D]
+        dst = dst_ref[...]                              # [bc]
+        epos = aligned + jax.lax.broadcasted_iota(jnp.int32, (bc,), 0)
+        valid = (epos >= lo) & (epos < hi)
+        local = jnp.where(valid, dst - base, bn)        # bn == dump row
+        onehot = (local[:, None]
+                  == jax.lax.broadcasted_iota(jnp.int32, (bc, bn), 1))
+        onehot = (onehot & valid[:, None]).astype(jnp.float32)
+        acc_scr[...] += jax.lax.dot_general(
+            onehot, msg, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # [bn, D]
+
+    @pl.when(cj == n_chunks - 1)
+    def _finalize():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_nodes", "bn", "bc", "interpret"))
+def segment_sum_sorted(msg: jnp.ndarray, dst: jnp.ndarray, n_nodes: int,
+                       bn: int = 128, bc: int = 256,
+                       interpret: bool = False) -> jnp.ndarray:
+    """msg [E, D] edge messages; dst [E] int32 sorted ascending.
+
+    Returns [n_nodes, D] segment sums. E and n_nodes are padded to block
+    multiples internally.
+    """
+    E, D = msg.shape
+    n_pad = ((n_nodes + bn - 1) // bn) * bn
+    e_pad = ((E + bc - 1) // bc) * bc
+    if e_pad != E:
+        msg = jnp.pad(msg, ((0, e_pad - E), (0, 0)))
+        dst = jnp.pad(dst, (0, e_pad - E), constant_values=n_pad)
+    n_blocks = n_pad // bn
+
+    # CSR-ish block offsets: first edge index whose dst >= block base
+    bases = jnp.arange(n_blocks + 1, dtype=jnp.int32) * bn
+    starts = jnp.searchsorted(dst, bases).astype(jnp.int32)
+    # worst-case chunks a block can span (static): all edges + misalignment
+    max_chunks = max(1, e_pad // bc + 1)
+    last_chunk = e_pad // bc - 1
+
+    def msg_map(ni, cj, starts_ref):
+        # aligned chunk containing (block start + cj*bc); clamped — the
+        # kernel's range mask kills any out-of-range iteration
+        return (jnp.minimum((starts_ref[ni] + cj * bc) // bc, last_chunk), 0)
+
+    def dst_map(ni, cj, starts_ref):
+        return (jnp.minimum((starts_ref[ni] + cj * bc) // bc, last_chunk),)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks, max_chunks),
+        in_specs=[
+            pl.BlockSpec((bc, D), msg_map),
+            pl.BlockSpec((bc,), dst_map),
+        ],
+        out_specs=pl.BlockSpec((bn, D), lambda ni, cj, s: (ni, 0)),
+        scratch_shapes=[pltpu.VMEM((bn, D), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_segmp_kernel, bn=bn, bc=bc,
+                          n_chunks=max_chunks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pad, D), msg.dtype),
+        interpret=interpret,
+    )(starts, msg, dst.astype(jnp.int32))
+    return out[:n_nodes]

@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "3")  # silence SPMD warnings
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import — jax locks the device
+count at first init; the dry-run needs 512 placeholder host devices to build
+the production meshes. (Smoke tests and benches see 1 device — this env var
+is set here and nowhere else.)
+
+Per cell this driver records:
+  - compiled.memory_analysis()  (per-device bytes — proves the cell fits)
+  - compiled.cost_analysis()    (per-device HLO FLOPs / bytes accessed)
+  - collective bytes parsed from the post-SPMD HLO text
+  - the single-layer probe costs for the scan trip-count correction
+    (XLA counts a while-loop body once; roofline total = module + (L-1) x
+    probe — methodology in EXPERIMENTS.md §Roofline)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+Results go to artifacts/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from ..configs.registry import all_cells, build_cell, get_spec, skipped_cells
+from .mesh import make_production_mesh
+
+# matches "<name> = <shape-or-tuple> <collective-op>(...)" — keyed on the
+# OPCODE on the right-hand side, robust to custom instruction names
+COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\(")
+SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|f64|s64|pred|s16|u16)"
+                      r"\[([\d,]*)\]")
+
+DTYPE_BYTES = {"f64": 8, "s64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2,
+               "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of collective ops in post-SPMD HLO text."""
+    out: dict[str, float] = {}
+    n_ops: dict[str, int] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        total = 0
+        for sm in SHAPE_RE.finditer(shapes):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + total
+        n_ops[kind] = n_ops.get(kind, 0) + 1
+    return {"bytes_by_kind": out, "ops_by_kind": n_ops,
+            "total_bytes": sum(out.values())}
+
+
+def analyze(lowered, compiled) -> dict:
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "peak_bytes": int(mem.argument_size_in_bytes
+                          + mem.output_size_in_bytes
+                          + mem.temp_size_in_bytes),
+        "collectives": coll,
+    }
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
+             skip_existing: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape}__{mesh_kind}".replace("/", "_")
+    path = os.path.join(out_dir, f"{tag}.json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    spec = get_spec(arch)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    record: dict = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                    "mesh_shape": list(mesh.devices.shape)}
+    t0 = time.time()
+    try:
+        with mesh:
+            cell = build_cell(spec, shape, mesh)
+            lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                              out_shardings=cell.out_shardings
+                              ).lower(*cell.abstract_args)
+            compiled = lowered.compile()
+            record.update(analyze(lowered, compiled))
+            record["description"] = cell.description
+            record["cost_multiplier"] = cell.cost_multiplier
+            if cell.probe is not None:
+                pfn, pargs, pshard, repeat = cell.probe
+                pl_ = jax.jit(pfn, in_shardings=pshard).lower(*pargs)
+                pc = pl_.compile()
+                record["probe"] = analyze(pl_, pc)
+                record["probe_repeat"] = repeat
+            record["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record failures as data
+        record["ok"] = False
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-3000:]
+    record["seconds"] = round(time.time() - t0, 2)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    status = "OK " if record.get("ok") else "FAIL"
+    print(f"[dryrun] {status} {tag} ({record['seconds']}s)", flush=True)
+    if not record.get("ok"):
+        print("   ", record["error"], flush=True)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a, s in all_cells():
+            print(f"{a:26s} {s}")
+        for a, s, why in skipped_cells():
+            print(f"{a:26s} {s}  SKIPPED: {why}")
+        return
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = (all_cells() if args.all
+             else [(args.arch, args.shape)])
+    n_fail = 0
+    for mesh_kind in meshes:
+        for arch, shape in cells:
+            rec = run_cell(arch, shape, mesh_kind, args.out,
+                           skip_existing=not args.force)
+            n_fail += 0 if rec.get("ok") else 1
+    print(f"[dryrun] done, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

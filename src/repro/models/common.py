@@ -1,0 +1,121 @@
+"""Shared model building blocks (pure JAX, no framework deps).
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Sharding is
+expressed with ``jax.sharding.PartitionSpec`` built from :class:`AxisRules`,
+applied through ``with_sharding_constraint`` under an ambient mesh — model
+code never touches a concrete mesh object, so the same model runs on the
+single-pod (data, model) and multi-pod (pod, data, model) production meshes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    """Logical -> mesh axis mapping.
+
+    batch: axes that shard the batch (data parallel, incl. the pod axis)
+    fsdp:  axis that shards parameter rows (fully-sharded data parallel)
+    tp:    tensor-parallel axis (heads / ffn / vocab / experts)
+    mesh:  optional concrete Mesh — required only by shard_map code paths
+           (explicit-SPMD MoE dispatch); GSPMD paths work without it.
+    """
+
+    batch: tuple[str, ...] = ("data",)
+    fsdp: str | None = "data"
+    tp: str | None = "model"
+    mesh: object = None
+
+    @classmethod
+    def for_mesh_axes(cls, axis_names: tuple[str, ...],
+                      mesh=None) -> "AxisRules":
+        if "pod" in axis_names:
+            return cls(batch=("pod", "data"), fsdp="data", tp="model",
+                       mesh=mesh)
+        return cls(batch=("data",), fsdp="data", tp="model", mesh=mesh)
+
+    @classmethod
+    def for_mesh(cls, mesh) -> "AxisRules":
+        return cls.for_mesh_axes(tuple(mesh.axis_names), mesh=mesh)
+
+
+def constrain(x: jnp.ndarray, *spec) -> jnp.ndarray:
+    """with_sharding_constraint under the ambient mesh; no-op outside jit."""
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x  # no mesh context (e.g. plain CPU tests)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray,
+             eps: float = 1e-6, offset: float = 0.0) -> jnp.ndarray:
+    """RMSNorm in fp32, cast back to input dtype. Gemma uses (1+scale)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (offset + scale.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embeddings. x: [..., S, H, D_head], positions: [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [...,S,half]
+    cos = jnp.cos(angles)[..., :, None, :]   # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+# ---------------------------------------------------------------------------
+# initialization
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, shape: tuple[int, ...],
+               in_axis: int = -2, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Truncated-normal fan-in init (LeCun-ish), bf16 storage."""
+    fan_in = shape[in_axis]
+    std = (1.0 / fan_in) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: tuple[int, ...],
+               dtype=jnp.bfloat16) -> jnp.ndarray:
+    """1/sqrt(d) embeddings: tied-logit variance O(1); pairs with the
+    sqrt(d) embedding rescale Gemma-style models apply in forward."""
+    std = shape[-1] ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def key_tree(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))

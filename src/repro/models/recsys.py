@@ -1,0 +1,183 @@
+"""Wide & Deep recommender (Cheng et al. '16) with a manual EmbeddingBag.
+
+JAX has no native ``nn.EmbeddingBag``; the lookup here is the FBGEMM-style
+*unified table*: all 40 sparse fields share one [F * V, D] table and ids are
+offset by field (one big gather + masked bag-reduce instead of 40 small
+ones). The gather is the hot path — on TPU the embedding table is row-sharded
+over the 'model' axis (the classic table-sharding / all-to-all pattern), and
+``repro/kernels/embedding_bag.py`` provides the Pallas kernel.
+
+Four serving shapes are first-class:
+  train_batch (65k BCE training), serve_p99 (512), serve_bulk (262k),
+  retrieval_cand (1 query x 1,000,000 candidates: user-tower embedding dotted
+  against a sharded candidate matrix + global top-k — batched GEMV, no loop).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import AxisRules, constrain, dense_init, key_tree
+
+
+@dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    n_sparse: int = 40           # categorical fields
+    vocab_per_field: int = 1_000_000
+    embed_dim: int = 32
+    n_dense: int = 13
+    nnz_per_field: int = 4       # multi-hot entries per field
+    mlp_dims: tuple[int, ...] = (1024, 512, 256)
+    n_candidates: int = 1_000_000
+    retrieval_dim: int = 256
+
+    @property
+    def unified_rows(self) -> int:
+        return self.n_sparse * self.vocab_per_field
+
+    def param_count(self) -> int:
+        emb = self.unified_rows * self.embed_dim
+        wide = self.unified_rows + self.n_dense
+        d_in = self.n_sparse * self.embed_dim + self.n_dense
+        deep = 0
+        dims = (d_in,) + self.mlp_dims
+        for i in range(len(dims) - 1):
+            deep += dims[i] * dims[i + 1] + dims[i + 1]
+        retr = self.n_candidates * self.retrieval_dim
+        return emb + wide + deep + self.mlp_dims[-1] + 1 + retr
+
+
+def init_recsys_params(cfg: RecsysConfig, key: jax.Array,
+                       dtype=jnp.float32) -> dict:
+    ks = key_tree(key, 6 + len(cfg.mlp_dims))
+    d_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    dims = (d_in,) + cfg.mlp_dims
+    mlp = []
+    for i in range(len(dims) - 1):
+        mlp.append({
+            "w": dense_init(ks[2 + i], (dims[i], dims[i + 1]), dtype=dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        })
+    std = cfg.embed_dim ** -0.5
+    return {
+        "embed": (jax.random.normal(ks[0], (cfg.unified_rows, cfg.embed_dim),
+                                    jnp.float32) * std).astype(dtype),
+        "wide": (jax.random.normal(ks[1], (cfg.unified_rows,), jnp.float32)
+                 * 0.01).astype(dtype),
+        "wide_dense": jnp.zeros((cfg.n_dense,), dtype),
+        "mlp": mlp,
+        "head": dense_init(ks[-2], (cfg.mlp_dims[-1], 1), dtype=dtype),
+        "bias": jnp.zeros((), dtype),
+        "candidates": (jax.random.normal(
+            ks[-1], (cfg.n_candidates, cfg.retrieval_dim), jnp.float32)
+            * cfg.retrieval_dim ** -0.5).astype(dtype),
+    }
+
+
+def recsys_param_shardings(cfg: RecsysConfig, rules: AxisRules) -> dict:
+    """Row-shard the big tables over TP; replicate the small MLP."""
+    from jax.sharding import PartitionSpec as P
+    tp, fs = rules.tp, rules.fsdp
+    return {
+        "embed": P(tp, None),
+        "wide": P(tp),
+        "wide_dense": P(None),
+        # the deep MLP is ~2M params — replicate (first dim 40*32+13=1293
+        # is not tileable anyway)
+        "mlp": [{"w": P(None, None), "b": P(None)} for _ in cfg.mlp_dims],
+        "head": P(None, None),
+        "bias": P(),
+        "candidates": P(tp, None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag: unified-table gather + masked mean over the bag
+# ---------------------------------------------------------------------------
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray, mask: jnp.ndarray,
+                  vocab_per_field: int, combiner: str = "mean",
+                  ) -> jnp.ndarray:
+    """ids [B, F, NNZ] per-field local ids; mask [B, F, NNZ] in {0,1}.
+
+    Returns [B, F, D]. Offsetting folds all fields into one gather.
+    """
+    B, F, NNZ = ids.shape
+    offsets = (jnp.arange(F, dtype=ids.dtype) * vocab_per_field)[None, :, None]
+    flat = (ids + offsets).reshape(-1)
+    emb = table[flat].reshape(B, F, NNZ, -1)
+    emb = emb * mask[..., None].astype(emb.dtype)
+    s = emb.sum(axis=2)
+    if combiner == "sum":
+        return s
+    cnt = jnp.maximum(mask.sum(axis=2), 1.0)[..., None].astype(emb.dtype)
+    return s / cnt
+
+
+def wide_deep_logits(cfg: RecsysConfig, params: dict, batch: dict,
+                     rules: AxisRules) -> jnp.ndarray:
+    """batch: ids [B,F,NNZ] int32, id_mask [B,F,NNZ], dense [B, n_dense]."""
+    ids, mask, dense = batch["ids"], batch["id_mask"], batch["dense"]
+    B, F, NNZ = ids.shape
+    bags = embedding_bag(params["embed"], ids, mask, cfg.vocab_per_field)
+    bags = constrain(bags, rules.batch, None, None)
+
+    # wide: per-id scalar weights, bag-summed + dense linear
+    offsets = (jnp.arange(F, dtype=ids.dtype)
+               * cfg.vocab_per_field)[None, :, None]
+    wide_vals = params["wide"][(ids + offsets).reshape(-1)].reshape(B, F, NNZ)
+    wide = (wide_vals * mask.astype(wide_vals.dtype)).sum(axis=(1, 2))
+    wide = wide + dense.astype(wide_vals.dtype) @ params["wide_dense"]
+
+    # deep: concat(field bags, dense) -> MLP (interaction=concat)
+    x = jnp.concatenate(
+        [bags.reshape(B, F * cfg.embed_dim), dense.astype(bags.dtype)],
+        axis=-1)
+    for layer in params["mlp"]:
+        x = jax.nn.relu(x @ layer["w"] + layer["b"])
+        x = constrain(x, rules.batch, None)
+    deep = (x @ params["head"])[:, 0]
+    return wide + deep + params["bias"]
+
+
+def recsys_loss(cfg: RecsysConfig, params: dict, batch: dict,
+                rules: AxisRules) -> tuple[jnp.ndarray, dict]:
+    logits = wide_deep_logits(cfg, params, batch, rules).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    acc = jnp.mean((logits > 0) == (y > 0.5))
+    return loss, {"bce": loss, "acc": acc}
+
+
+def recsys_score(cfg: RecsysConfig, params: dict, batch: dict,
+                 rules: AxisRules) -> jnp.ndarray:
+    """Online/offline scoring path (serve_p99 / serve_bulk)."""
+    return jax.nn.sigmoid(wide_deep_logits(cfg, params, batch, rules))
+
+
+def retrieval_topk(cfg: RecsysConfig, params: dict, batch: dict,
+                   rules: AxisRules, k: int = 100,
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Score 1 query against n_candidates via the user tower; global top-k.
+
+    The candidate matrix is row-sharded over TP; the dot product and top-k
+    lower to a sharded GEMV + cross-shard top-k reduction (no host loop).
+    """
+    ids, mask, dense = batch["ids"], batch["id_mask"], batch["dense"]
+    B = ids.shape[0]
+    bags = embedding_bag(params["embed"], ids, mask, cfg.vocab_per_field)
+    x = jnp.concatenate(
+        [bags.reshape(B, cfg.n_sparse * cfg.embed_dim),
+         dense.astype(bags.dtype)], axis=-1)
+    for layer in params["mlp"]:
+        x = jax.nn.relu(x @ layer["w"] + layer["b"])
+    # user tower output = last MLP layer (retrieval_dim)
+    scores = x @ params["candidates"].T          # [B, n_candidates]
+    scores = constrain(scores, rules.batch, rules.tp)
+    return jax.lax.top_k(scores, k)

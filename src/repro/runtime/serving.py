@@ -1,0 +1,94 @@
+"""Model serving with the paper's offload scheduler as admission layer.
+
+The MINLP scheduler is workload-agnostic: it places any task with (cycles,
+result-bytes, executability mask). Here it routes *inference requests*
+across a pool of "edge" replicas (each serving a subset of request classes —
+the analogue of pattern residency) and a "cloud" fallback pool, then the
+replicas execute their assigned requests in one batch each.
+
+This is the paper's technique as a first-class serving feature — the same
+``core.scheduler`` object schedules SPARQL queries in repro/edge and model
+inference here.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from ..core.cost import QueryTasks, SystemParams
+from ..core.scheduler import schedule
+
+
+@dataclass
+class Replica:
+    """An edge replica: which request classes it serves + its capacity."""
+
+    replica_id: int
+    classes: set[int]
+    cycles_per_s: float
+    link_bps: float                      # replica -> client rate
+    runner: Callable | None = None       # batch of requests -> responses
+
+
+@dataclass
+class ServedBatch:
+    assignments: np.ndarray              # [N] replica id or -1 (cloud)
+    objective: float
+    schedule_seconds: float
+    responses: list = field(default_factory=list)
+
+
+class OffloadServingPool:
+    """Schedule + execute one admission batch of requests."""
+
+    def __init__(self, replicas: list[Replica], cloud_runner: Callable,
+                 cloud_link_bps: float = 5e6) -> None:
+        self.replicas = replicas
+        self.cloud_runner = cloud_runner
+        self.cloud_link_bps = cloud_link_bps
+
+    def admit(self, requests: list[dict], policy: str = "bnb",
+              execute: bool = True, **sched_kw) -> ServedBatch:
+        """requests: dicts with {class_id, cycles, result_bits, payload}."""
+        N, K = len(requests), len(self.replicas)
+        c = np.array([r["cycles"] for r in requests], dtype=np.float64)
+        w = np.array([r["result_bits"] for r in requests], dtype=np.float64)
+        e = np.zeros((N, K))
+        for i, r in enumerate(requests):
+            for j, rep in enumerate(self.replicas):
+                if r["class_id"] in rep.classes:
+                    e[i, j] = 1.0
+        params = SystemParams(
+            F=np.array([rep.cycles_per_s for rep in self.replicas]),
+            r_edge=np.tile(np.array([rep.link_bps
+                                     for rep in self.replicas]), (N, 1)),
+            r_cloud=np.full(N, self.cloud_link_bps),
+            assoc=np.ones((N, K), dtype=bool),
+        )
+        tasks = QueryTasks(c=c, w=w, e=e)
+        t0 = time.perf_counter()
+        sr = schedule(tasks, params, policy=policy, **sched_kw)
+        dt = time.perf_counter() - t0
+        assign = np.full(N, -1, dtype=np.int64)
+        De = sr.D * e
+        for i in range(N):
+            if De[i].sum() > 0:
+                assign[i] = int(De[i].argmax())
+
+        responses: list = [None] * N
+        if execute:
+            for j in list(range(K)) + [-1]:
+                idx = np.flatnonzero(assign == j)
+                if len(idx) == 0:
+                    continue
+                runner = (self.cloud_runner if j < 0
+                          else (self.replicas[j].runner or self.cloud_runner))
+                outs = runner([requests[i]["payload"] for i in idx])
+                for i, o in zip(idx, outs):
+                    responses[i] = o
+        return ServedBatch(assignments=assign, objective=sr.objective,
+                           schedule_seconds=dt, responses=responses)

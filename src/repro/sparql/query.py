@@ -1,0 +1,165 @@
+"""SPARQL BGP query graphs (paper Def. 2) + a minimal parser.
+
+A query is a directed multigraph whose vertices are entity constants or
+variables and whose edge labels are predicates (constant or variable).  The
+parser covers the BGP subset used throughout the paper: ``SELECT``
+projections and a ``WHERE`` block of dot-separated triple patterns with
+``<uri>`` / ``?var`` / ``"literal"`` terms and optional ``PREFIX``es.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..rdf.dictionary import Dictionary
+
+VAR_S = -1  # sentinel id for "this position is a variable"
+
+
+@dataclass(frozen=True)
+class TriplePattern:
+    """One edge of the query graph. Ids are dictionary ids or names for vars."""
+
+    s: str | int   # int entity id (constant) or "?name"
+    p: str | int   # int predicate id or "?name"
+    o: str | int
+
+    def variables(self) -> list[str]:
+        return [t for t in (self.s, self.p, self.o)
+                if isinstance(t, str)]
+
+
+@dataclass
+class QueryGraph:
+    """A BGP query: triple patterns + projection list."""
+
+    patterns: list[TriplePattern]
+    projection: list[str]  # variable names; empty == SELECT *
+
+    @property
+    def variables(self) -> list[str]:
+        seen: dict[str, None] = {}
+        for tp in self.patterns:
+            for v in tp.variables():
+                seen.setdefault(v)
+        return list(seen)
+
+    @property
+    def vertex_variables(self) -> list[str]:
+        seen: dict[str, None] = {}
+        for tp in self.patterns:
+            for t in (tp.s, tp.o):
+                if isinstance(t, str):
+                    seen.setdefault(t)
+        return list(seen)
+
+    def n_edges(self) -> int:
+        return len(self.patterns)
+
+    # -- structural views used by pattern canonicalization ------------------
+    def vertices(self) -> list[str | int]:
+        seen: dict[str | int, None] = {}
+        for tp in self.patterns:
+            seen.setdefault(tp.s)
+            seen.setdefault(tp.o)
+        return list(seen)
+
+    def edge_array(self) -> np.ndarray:
+        """[E, 3] array over *local vertex indices*; predicate -2 if variable.
+
+        Constants keep identity through a vertex table returned alongside by
+        ``vertex_table``.
+        """
+        vmap = {v: i for i, v in enumerate(self.vertices())}
+        out = np.zeros((len(self.patterns), 3), dtype=np.int64)
+        for i, tp in enumerate(self.patterns):
+            out[i, 0] = vmap[tp.s]
+            out[i, 1] = -2 if isinstance(tp.p, str) else tp.p
+            out[i, 2] = vmap[tp.o]
+        return out
+
+    def is_weakly_connected(self) -> bool:
+        verts = self.vertices()
+        if not verts:
+            return True
+        vmap = {v: i for i, v in enumerate(verts)}
+        parent = list(range(len(verts)))
+
+        def find(a: int) -> int:
+            while parent[a] != a:
+                parent[a] = parent[parent[a]]
+                a = parent[a]
+            return a
+
+        for tp in self.patterns:
+            ra, rb = find(vmap[tp.s]), find(vmap[tp.o])
+            if ra != rb:
+                parent[ra] = rb
+        return len({find(i) for i in range(len(verts))}) == 1
+
+
+_TERM = r"""(\?[A-Za-z_][\w]*|<[^>\s]+>|"[^"]*"|[A-Za-z_][\w]*:[\w\-.]*)"""
+_TRIPLE_RE = re.compile(rf"\s*{_TERM}\s+{_TERM}\s+{_TERM}\s*")
+_PREFIX_RE = re.compile(r"PREFIX\s+([A-Za-z_][\w]*):\s*<([^>]*)>",
+                        re.IGNORECASE)
+_SELECT_RE = re.compile(r"SELECT\s+(.*?)\s+WHERE\s*\{(.*)\}",
+                        re.IGNORECASE | re.DOTALL)
+
+
+class ParseError(ValueError):
+    pass
+
+
+def parse_sparql(text: str, dictionary: Dictionary) -> QueryGraph:
+    """Parse a BGP SELECT query against a dictionary.
+
+    Unknown constants raise ``ParseError`` — a query mentioning an entity not
+    in the graph has no matches anywhere, and the paper's system routes on
+    encoded ids.
+    """
+    prefixes = dict(_PREFIX_RE.findall(text))
+    m = _SELECT_RE.search(text)
+    if not m:
+        raise ParseError("not a SELECT ... WHERE { ... } query")
+    proj_raw, body = m.group(1), m.group(2)
+    projection = ([] if proj_raw.strip() == "*"
+                  else re.findall(r"\?[\w]+", proj_raw))
+
+    def decode(tok: str, position: str) -> str | int:
+        if tok.startswith("?"):
+            return tok
+        if tok.startswith("<"):
+            term = tok[1:-1]
+        elif tok.startswith('"'):
+            term = tok[1:-1]
+        else:  # prefixed name
+            pfx, _, local = tok.partition(":")
+            if pfx not in prefixes:
+                raise ParseError(f"unknown prefix {pfx!r}")
+            term = prefixes[pfx] + local
+        if position == "p":
+            if not dictionary.has_predicate(term):
+                raise ParseError(f"unknown predicate {term!r}")
+            return dictionary.predicate_id(term)
+        if not dictionary.has_entity(term):
+            raise ParseError(f"unknown entity {term!r}")
+        return dictionary.entity_id(term)
+
+    patterns: list[TriplePattern] = []
+    for chunk in body.split("."):
+        chunk = chunk.strip()
+        if not chunk:
+            continue
+        tm = _TRIPLE_RE.fullmatch(chunk)
+        if not tm:
+            raise ParseError(f"bad triple pattern: {chunk!r}")
+        s, p, o = (tm.group(1), tm.group(2), tm.group(3))
+        patterns.append(TriplePattern(decode(s, "s"), decode(p, "p"),
+                                      decode(o, "o")))
+    if not patterns:
+        raise ParseError("empty WHERE block")
+    q = QueryGraph(patterns=patterns, projection=projection)
+    return q

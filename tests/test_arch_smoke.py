@@ -1,0 +1,110 @@
+"""Per-arch smoke tests: reduced config, one forward/train step, finite.
+
+The FULL configs are exercised compile-only by the dry-run; these tests run
+real numerics on CPU with the same model code and a shrunken topology.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, all_cells, get_spec
+from repro.launch.train import make_batch_iter, reduce_config
+from repro.models.common import AxisRules
+from repro.models.gnn import gnn_init, gnn_loss
+from repro.models.recsys import (init_recsys_params, recsys_loss,
+                                 recsys_score, retrieval_topk)
+from repro.models.transformer import (init_kv_cache, init_lm_params,
+                                      lm_decode_step, lm_forward, lm_loss)
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.train_loop import make_train_step
+
+RULES = AxisRules(batch=(), fsdp=None, tp=None)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_train_step(arch_id):
+    spec = get_spec(arch_id)
+    cfg = reduce_config(spec)
+    key = jax.random.PRNGKey(0)
+    if spec.family == "lm":
+        params = init_lm_params(cfg, key)
+        loss_fn = lambda p, b: lm_loss(cfg, p, b, RULES)      # noqa: E731
+    elif spec.family == "gnn":
+        params = gnn_init(cfg, key)
+        loss_fn = lambda p, b: gnn_loss(cfg, p, b, RULES)     # noqa: E731
+    else:
+        params = init_recsys_params(cfg, key)
+        loss_fn = lambda p, b: recsys_loss(cfg, p, b, RULES)  # noqa: E731
+
+    from repro.optim.adamw import adamw_init
+    batch = next(make_batch_iter(spec, cfg, batch_size=4, seed=1))
+    step = jax.jit(make_train_step(loss_fn, AdamWConfig(peak_lr=1e-3)))
+    opt = adamw_init(params)
+    p2, opt2, metrics = step(params, opt, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), (arch_id, loss)
+    assert int(opt2["step"]) == 1
+    # params actually changed
+    delta = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        params, p2)
+    assert max(jax.tree.leaves(delta)) > 0
+    # output shapes per family
+    if spec.family == "lm":
+        logits, aux = jax.jit(
+            lambda p, t: lm_forward(cfg, p, t, RULES))(params, batch)
+        assert logits.shape == (*batch.shape, cfg.padded_vocab)
+        assert np.isfinite(np.asarray(logits.astype(jnp.float32))).all()
+
+
+@pytest.mark.parametrize("arch_id",
+                         [a for a in ARCH_IDS
+                          if get_spec(a).family == "lm"])
+def test_smoke_lm_decode(arch_id):
+    spec = get_spec(arch_id)
+    cfg = reduce_config(spec)
+    params = init_lm_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    cache = init_kv_cache(cfg, 2, 16)
+    logits_all, _ = jax.jit(
+        lambda p, t: lm_forward(cfg, p, t, RULES))(params, toks)
+    dec = jax.jit(lambda p, c, t, i: lm_decode_step(cfg, p, c, t, i, RULES))
+    lg = None
+    for i in range(5):
+        lg, cache = dec(params, cache, toks[:, i:i + 1], jnp.int32(i))
+    a = np.asarray(lg[:, 0].astype(jnp.float32))
+    b = np.asarray(logits_all[:, 4].astype(jnp.float32))
+    scale = max(1.0, float(np.abs(b).max()))
+    assert np.abs(a - b).max() < 0.06 * scale, arch_id
+
+
+def test_smoke_recsys_serving_paths():
+    spec = get_spec("wide-deep")
+    cfg = reduce_config(spec)
+    params = init_recsys_params(cfg, jax.random.PRNGKey(0))
+    batch = next(make_batch_iter(spec, cfg, batch_size=8, seed=2))
+    s = jax.jit(lambda p, b: recsys_score(cfg, p, b, RULES))(params, batch)
+    assert s.shape == (8,) and bool(((s >= 0) & (s <= 1)).all())
+    one = {k: v[:1] for k, v in batch.items()}
+    vals, idx = jax.jit(
+        lambda p, b: retrieval_topk(cfg, p, b, RULES, k=5))(params, one)
+    assert vals.shape == (1, 5)
+    assert bool((vals[0, :-1] >= vals[0, 1:]).all())
+
+
+def test_registry_covers_assignment():
+    """40 declared cells; skips only where the brief allows them."""
+    cells = all_cells()
+    skips = {(a, s) for a in ARCH_IDS
+             for s in get_spec(a).skip_shapes}
+    assert len(cells) + len(skips) == 40
+    # only long_500k may be skipped, and only for pure full-attention LMs
+    for (a, s) in skips:
+        assert s == "long_500k"
+        assert get_spec(a).family == "lm"
+    assert ("gemma2-2b", "long_500k") in cells  # hybrid arch runs it

@@ -1,0 +1,161 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.segment_mp import segment_sum_sorted
+from repro.kernels.triple_scan import triple_scan
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# -- flash attention -----------------------------------------------------------
+
+FLASH_CASES = [
+    # B, H, Hkv, S, d, window, softcap
+    (2, 4, 2, 128, 32, 0, 0.0),
+    (1, 4, 4, 256, 64, 0, 50.0),
+    (2, 8, 2, 256, 32, 64, 0.0),
+    (1, 2, 1, 64, 16, 32, 30.0),
+    (1, 8, 8, 512, 64, 128, 0.0),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(case, dtype):
+    B, H, Hkv, S, d, win, cap = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, d), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, d), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, d), dtype)
+    out = flash_attention(q, k, v, window=win, softcap=cap, bq=64, bk=64,
+                          interpret=True)
+    want = ref.mha_reference(q, k, v, window=win, softcap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_flash_attention_block_shape_sweep():
+    B, H, S, d = 1, 2, 256, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, d), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, S, d), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, d), jnp.float32)
+    want = ref.mha_reference(q, k, v)
+    for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]:
+        out = flash_attention(q, k, v, bq=bq, bk=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# -- decode attention ----------------------------------------------------------
+
+DECODE_CASES = [
+    # B, H, Hkv, S, d, window
+    (2, 4, 2, 256, 32, 0),
+    (1, 8, 1, 512, 64, 0),
+    (3, 4, 4, 128, 32, 48),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_vs_ref(case, dtype):
+    B, H, Hkv, S, d, win = case
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, d), dtype)
+    kc = jax.random.normal(ks[1], (B, Hkv, S, d), dtype)
+    vc = jax.random.normal(ks[2], (B, Hkv, S, d), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
+    out = decode_attention(q, kc, vc, lengths, window=win, bk=64,
+                           interpret=True)
+    want = ref.decode_reference(q, kc, vc, lengths, window=win)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+# -- GNN segment message passing --------------------------------------------------
+
+@pytest.mark.parametrize("E,N,D", [(100, 40, 16), (1000, 64, 32),
+                                   (257, 130, 8), (64, 256, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_mp_vs_ref(E, N, D, dtype):
+    ks = jax.random.split(KEY, 2)
+    msg = jax.random.normal(ks[0], (E, D), dtype)
+    dst = jnp.sort(jax.random.randint(ks[1], (E,), 0, N))
+    out = segment_sum_sorted(msg, dst, N, bn=32, bc=64, interpret=True)
+    # oracle in fp32: the kernel accumulates in fp32 scratch regardless of
+    # input dtype (more accurate than a bf16 pairwise segment_sum)
+    want = ref.segment_sum_sorted_reference(msg.astype(jnp.float32), dst, N)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               **tol(dtype))
+
+
+def test_segment_mp_empty_and_hot_nodes():
+    # one node receives everything; most receive nothing
+    E, N, D = 512, 64, 16
+    msg = jnp.ones((E, D), jnp.float32)
+    dst = jnp.zeros((E,), jnp.int32).at[256:].set(63)
+    dst = jnp.sort(dst)
+    out = segment_sum_sorted(msg, dst, N, bn=16, bc=128, interpret=True)
+    assert float(out[0, 0]) == 256.0
+    assert float(out[63, 0]) == 256.0
+    assert float(jnp.abs(out[1:63]).max()) == 0.0
+
+
+# -- embedding bag ------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,F,NNZ,V,D", [(4, 3, 4, 100, 16),
+                                         (2, 8, 2, 1000, 32),
+                                         (8, 1, 6, 50, 64)])
+@pytest.mark.parametrize("combiner", ["mean", "sum"])
+def test_embedding_bag_vs_ref(B, F, NNZ, V, D, combiner):
+    ks = jax.random.split(KEY, 3)
+    table = jax.random.normal(ks[0], (V, D), jnp.float32)
+    ids = jax.random.randint(ks[1], (B, F, NNZ), 0, V)
+    mask = (jax.random.uniform(ks[2], (B, F, NNZ)) < 0.7).astype(jnp.float32)
+    mask = mask.at[:, :, 0].set(1.0)
+    out = embedding_bag_pallas(table, ids, mask, combiner=combiner,
+                               interpret=True)
+    want = ref.embedding_bag_reference(table, ids, mask, combiner=combiner)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# -- triple scan -------------------------------------------------------------------
+
+@pytest.mark.parametrize("T", [100, 2048, 5000])
+def test_triple_scan_vs_ref(T):
+    rng = np.random.default_rng(0)
+    triples = jnp.asarray(rng.integers(0, 50, (T, 3)), jnp.int32)
+    for (s, p, o) in [(-1, 3, -1), (7, -1, -1), (-1, -1, -1), (1, 2, 3),
+                      (-1, 4, 9)]:
+        out = triple_scan(triples, jnp.asarray([s, p, o]), bt=512,
+                          interpret=True)
+        want = ref.triple_scan_reference(triples, s, p, o)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_triple_scan_agrees_with_matcher_candidates():
+    """The kernel implements the matcher's candidate scan semantics."""
+    from repro.rdf.generator import generate_watdiv_like
+    g = generate_watdiv_like(scale=0.3, seed=5)
+    triples = jnp.asarray(g.store.triples(), jnp.int32)
+    pid = 3
+    mask = triple_scan(triples, jnp.asarray([-1, pid, -1]), interpret=True)
+    got = np.flatnonzero(np.asarray(mask))
+    want = np.sort(g.store.pred_tids(pid))
+    np.testing.assert_array_equal(got, want)
