@@ -174,11 +174,37 @@ def estimate_query_cost(store: TripleStore, q: QueryGraph,
 
 
 def measured_query_cost(store: TripleStore, q: QueryGraph,
-                        ) -> tuple[float, float, int]:
-    """(c_n cycles-equivalent, w_n bits, n_matches) by actually executing."""
-    from ..sparql.matcher import match_bgp
-    res = match_bgp(store, q)
+                        engine=None) -> tuple[float, float, int]:
+    """(c_n cycles-equivalent, w_n bits, n_matches) by actually executing.
+
+    ``engine``: optional :class:`repro.sparql.engine.QueryEngine` — routes
+    execution through its backend and result cache, so repeated measurement
+    of a hot query (re-costing between scheduling rounds) is a cache hit.
+    """
+    if engine is not None:
+        res = engine.execute(store, q)
+    else:
+        from ..sparql.matcher import match_bgp
+        res = match_bgp(store, q)
     n_rows = res.num_matches
     c = CYCLES_BASE + CYCLES_PER_ROW * max(n_rows, 1)
     w = float(res.result_bytes(q.projection) * 8)
     return float(c), w, n_rows
+
+
+def measured_query_cost_batch(store: TripleStore, queries: list[QueryGraph],
+                              engine) -> tuple[np.ndarray, np.ndarray,
+                                               np.ndarray]:
+    """Vectorized measured costs ([N] c, [N] w, [N] n_matches) for a batch.
+
+    One ``engine.execute_batch`` call: identical candidate scans across the
+    batch run once and alpha-equivalent queries share cached results, which
+    is what makes measured (rather than estimated) costs affordable as a
+    scheduler input at serving scale.
+    """
+    results = engine.execute_batch(store, queries)
+    n = np.array([r.num_matches for r in results], dtype=np.int64)
+    c = CYCLES_BASE + CYCLES_PER_ROW * np.maximum(n, 1).astype(np.float64)
+    w = np.array([float(r.result_bytes(q.projection) * 8)
+                  for q, r in zip(queries, results)], dtype=np.float64)
+    return c, w, n

@@ -21,7 +21,8 @@ from ..core.induced import induced_edge_ids
 from ..core.pattern import Pattern, PatternIndex, pattern_of
 from ..core.placement import DynamicPlacement
 from ..rdf.graph import TripleStore
-from ..sparql.matcher import MatchResult, match_bgp
+from ..sparql.engine import QueryEngine
+from ..sparql.matcher import MatchResult
 from ..sparql.query import QueryGraph
 
 
@@ -32,28 +33,50 @@ class ExecutionRecord:
     result_bits: float
 
 
+def _execute_batch(store: TripleStore, engine: QueryEngine,
+                   queries: list[QueryGraph],
+                   ) -> list[tuple[MatchResult, ExecutionRecord]]:
+    """Run one server's batch through the engine; wall time is apportioned
+    evenly across the batch (scans/cache are shared, so per-query isolation
+    is not measurable — Eq. 5 accounting only needs the total)."""
+    t0 = time.perf_counter()
+    results = engine.execute_batch(store, queries)
+    per_q = (time.perf_counter() - t0) / max(1, len(queries))
+    return [(res, ExecutionRecord(res.num_matches, per_q,
+                                  res.result_bytes(q.projection) * 8))
+            for q, res in zip(queries, results)]
+
+
 class CloudServer:
     """Holds the complete RDF graph G."""
 
-    def __init__(self, store: TripleStore) -> None:
+    def __init__(self, store: TripleStore,
+                 engine: QueryEngine | None = None) -> None:
         self.store = store
+        self.engine = engine or QueryEngine()
 
     def execute(self, q: QueryGraph) -> tuple[MatchResult, ExecutionRecord]:
         t0 = time.perf_counter()
-        res = match_bgp(self.store, q)
+        res = self.engine.execute(self.store, q)
         dt = time.perf_counter() - t0
         return res, ExecutionRecord(res.num_matches, dt,
                                     res.result_bytes(q.projection) * 8)
+
+    def execute_batch(self, queries: list[QueryGraph],
+                      ) -> list[tuple[MatchResult, ExecutionRecord]]:
+        return _execute_batch(self.store, self.engine, queries)
 
 
 class EdgeServer:
     """Stores pattern-induced subgraphs G[P] + the pattern index."""
 
     def __init__(self, server_id: int, storage_budget_bytes: int,
-                 compute_cycles_per_s: float) -> None:
+                 compute_cycles_per_s: float,
+                 engine: QueryEngine | None = None) -> None:
         self.server_id = server_id
         self.budget = int(storage_budget_bytes)
         self.F = float(compute_cycles_per_s)
+        self.engine = engine or QueryEngine()
         self.placement = DynamicPlacement(budget_bytes=self.budget)
         self.index = PatternIndex()
         self.store: TripleStore | None = None
@@ -114,10 +137,15 @@ class EdgeServer:
     def execute(self, q: QueryGraph) -> tuple[MatchResult, ExecutionRecord]:
         assert self.store is not None, "edge server has no deployed data"
         t0 = time.perf_counter()
-        res = match_bgp(self.store, q)
+        res = self.engine.execute(self.store, q)
         dt = time.perf_counter() - t0
         return res, ExecutionRecord(res.num_matches, dt,
                                     res.result_bytes(q.projection) * 8)
+
+    def execute_batch(self, queries: list[QueryGraph],
+                      ) -> list[tuple[MatchResult, ExecutionRecord]]:
+        assert self.store is not None, "edge server has no deployed data"
+        return _execute_batch(self.store, self.engine, queries)
 
     def used_bytes(self) -> int:
         return self.store.size_bytes() if self.store is not None else 0

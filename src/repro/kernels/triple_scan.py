@@ -57,3 +57,45 @@ def triple_scan(triples: jnp.ndarray, pattern: jnp.ndarray, bt: int = 2048,
         interpret=interpret,
     )(pattern.astype(jnp.int32), triples.astype(jnp.int32))
     return mask[:T]
+
+
+def _scan_many_kernel(pat_ref, trip_ref, mask_ref, *, bt: int):
+    qi = pl.program_id(0)
+    s, p, o = pat_ref[qi, 0], pat_ref[qi, 1], pat_ref[qi, 2]
+    t = trip_ref[...]                                  # [bt, 3] int32
+    m = jnp.ones((bt,), jnp.bool_)
+    m &= (t[:, 0] == s) | (s < 0)
+    m &= (t[:, 1] == p) | (p < 0)
+    m &= (t[:, 2] == o) | (o < 0)
+    mask_ref[...] = m.astype(jnp.int32)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def triple_scan_many(triples: jnp.ndarray, patterns: jnp.ndarray,
+                     bt: int = 2048, interpret: bool = False) -> jnp.ndarray:
+    """Batched scan: triples [T, 3], patterns [Q, 3] (-1 wildcards) -> [Q, T].
+
+    Grid (Q, T/bt): every pattern streams the same triple blocks, so one
+    compiled kernel evaluates *all deduplicated scans of a query batch* in a
+    single launch — the batch-fusion counterpart of :func:`triple_scan` that
+    ``sparql.engine``'s JAX backend uses to pre-populate its scan memo.
+    """
+    T = triples.shape[0]
+    Q = patterns.shape[0]
+    t_pad = ((T + bt - 1) // bt) * bt
+    if t_pad != T:
+        triples = jnp.pad(triples, ((0, t_pad - T), (0, 0)),
+                          constant_values=-2)          # never matches
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, t_pad // bt),
+        in_specs=[pl.BlockSpec((bt, 3), lambda qi, i, pat: (i, 0))],
+        out_specs=pl.BlockSpec((1, bt), lambda qi, i, pat: (qi, i)),
+    )
+    mask = pl.pallas_call(
+        functools.partial(_scan_many_kernel, bt=bt),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, t_pad), jnp.int32),
+        interpret=interpret,
+    )(patterns.astype(jnp.int32), triples.astype(jnp.int32))
+    return mask[:, :T]

@@ -13,9 +13,16 @@ code (the TPU adaptation of gStore's pointer-based matching; see DESIGN.md §3).
 
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
 
 import numpy as np
+
+# Monotone store-version tokens. Stores are immutable after construction
+# (rebalance/subgraph build NEW stores), so a fresh token per instance is a
+# sound cache-invalidation key: any result memoized against version v can
+# never be served for a store with different contents.
+_STORE_VERSIONS = itertools.count()
 
 
 @dataclass
@@ -47,6 +54,7 @@ class TripleStore:
         self.s, self.p, self.o = trip[:, 0], trip[:, 1], trip[:, 2]
         self.num_entities = int(num_entities)
         self.num_predicates = int(num_predicates)
+        self.version = next(_STORE_VERSIONS)
         self._pred_index: dict[int, PredIndex] = {}
         self._build_indexes()
 

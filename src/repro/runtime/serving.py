@@ -92,3 +92,16 @@ class OffloadServingPool:
                     responses[i] = o
         return ServedBatch(assignments=assign, objective=sr.objective,
                            schedule_seconds=dt, responses=responses)
+
+
+def make_sparql_runner(store, engine) -> Callable:
+    """Replica runner serving SPARQL BGP payloads through a query engine.
+
+    ``payload`` items are :class:`repro.sparql.query.QueryGraph`s; the whole
+    per-replica assignment executes as ONE ``engine.execute_batch`` call, so
+    scan dedup and the result cache apply across the admission batch — the
+    SPARQL instantiation of this pool's batch-execution contract.
+    """
+    def runner(payloads: list) -> list:
+        return engine.execute_batch(store, list(payloads))
+    return runner

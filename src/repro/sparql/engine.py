@@ -1,0 +1,390 @@
+"""Batched, backend-pluggable BGP query execution engine.
+
+The paper's edge-cloud design (§3, Eq. 5) has every edge server execute a
+*stream* of queries against its pattern-induced subgraphs, and the cloud the
+rest against G. This module turns the single-query matcher into a serving
+engine with three layers:
+
+**1. Backend registry.** :class:`MatcherBackend` abstracts the per-pattern
+candidate scan — the hot spot that touches every stored triple. Backends are
+registered by name (``register_backend``) and constructed via
+``get_backend(name)``:
+
+- ``"numpy"`` — :class:`NumpyBackend`, the portable per-predicate-slice path
+  (exactly :func:`repro.sparql.matcher._candidates`).
+- ``"jax"`` — :class:`JaxBackend`, routes scans through the ``triple_scan``
+  Pallas kernel (interpret mode on CPU, compiled on TPU). The pattern arrives
+  as scalar prefetch, so ONE compiled kernel serves every pattern; batches of
+  deduplicated scans go through ``triple_scan_many`` in a single launch.
+
+Both backends return identical candidate-id *sets* (order may differ), so
+join results are identical as solution multisets.
+
+**2. Batching with scan dedup.** :meth:`QueryEngine.execute_batch` runs many
+queries against one store. Within a batch, candidate scans are keyed by their
+*scan key* — the pattern's constant components plus its repeated-variable
+equality structure (variable *names* don't matter for the scan) — and each
+distinct scan runs once; all queries sharing it reuse the array. The JAX
+backend additionally pre-scans all unique keys of the batch in one fused
+kernel launch.
+
+**3. LRU result cache.** Full match results are memoized under the key
+``(store.version, pattern-key)`` where *pattern-key* is the query's BGP
+canonicalized by renaming variables in first-occurrence order — so
+alpha-equivalent queries (same shape, same constants, different variable
+names) share an entry, while queries differing in any constant do not.
+``store.version`` is a monotone token minted per :class:`TripleStore`
+instance; rebalancing deploys a *new* store, so stale entries can never be
+served (they age out of the LRU). Cached arrays are shared between hits —
+treat :class:`MatchResult` buffers as read-only.
+
+Semantics: identical to per-query :func:`repro.sparql.matcher.match_bgp` —
+solution multisets are equal on every backend, asserted against the oracle in
+``tests/test_engine.py``.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from ..rdf.graph import TripleStore
+from .matcher import MatchResult, _candidates, match_bgp
+from .query import QueryGraph, TriplePattern
+
+# ---------------------------------------------------------------------------
+# scan / query keys
+# ---------------------------------------------------------------------------
+
+
+def scan_key(tp: TriplePattern) -> tuple:
+    """Identity of a candidate scan: constants + repeated-variable structure.
+
+    Two patterns with the same constants and the same variable-repetition
+    shape (e.g. ``(?x p ?x)`` vs ``(?y p ?y)``) select the same triple ids.
+    """
+    s = tp.s if isinstance(tp.s, int) else None
+    p = tp.p if isinstance(tp.p, int) else None
+    o = tp.o if isinstance(tp.o, int) else None
+    rep_so = isinstance(tp.s, str) and isinstance(tp.o, str) and tp.s == tp.o
+    rep_sp = isinstance(tp.s, str) and isinstance(tp.p, str) and tp.s == tp.p
+    rep_op = isinstance(tp.o, str) and isinstance(tp.p, str) and tp.o == tp.p
+    return (s, p, o, rep_so, rep_sp, rep_op)
+
+
+def query_key(q: QueryGraph) -> tuple[tuple, dict[str, str]]:
+    """(canonical BGP key, canonical->actual variable name map).
+
+    Variables are renamed ``?_0, ?_1, ...`` in first-occurrence order over
+    the patterns (s, p, o), so alpha-equivalent BGPs share a key. Projection
+    is excluded: a :class:`MatchResult` binds *all* variables.
+    """
+    ren: dict[str, str] = {}
+
+    def canon(t):
+        if isinstance(t, int):
+            return t
+        if t not in ren:
+            ren[t] = f"?_{len(ren)}"
+        return ren[t]
+
+    key = tuple((canon(tp.s), canon(tp.p), canon(tp.o)) for tp in q.patterns)
+    return key, {v: k for k, v in ren.items()}
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+class MatcherBackend:
+    """Candidate-scan provider behind :class:`QueryEngine`.
+
+    Contract: ``candidates(store, tp)`` returns exactly the triple ids of
+    ``store`` whose constant components match ``tp`` and whose repeated
+    variables (if any) are satisfiable — the same *set* NumPy's
+    ``_candidates`` yields, in any order.
+    """
+
+    name = "abstract"
+
+    def candidates(self, store: TripleStore, tp: TriplePattern) -> np.ndarray:
+        raise NotImplementedError
+
+    def prescan(self, store: TripleStore,
+                tps: list[TriplePattern]) -> dict[tuple, np.ndarray]:
+        """Scan many deduplicated patterns up front; default: one by one."""
+        out: dict[tuple, np.ndarray] = {}
+        for tp in tps:
+            k = scan_key(tp)
+            if k not in out:
+                out[k] = self.candidates(store, tp)
+        return out
+
+
+class NumpyBackend(MatcherBackend):
+    """Portable path: per-predicate CSR slice + constant masks."""
+
+    name = "numpy"
+
+    def candidates(self, store: TripleStore, tp: TriplePattern) -> np.ndarray:
+        return _candidates(store, tp)
+
+
+class JaxBackend(MatcherBackend):
+    """Scans via the ``triple_scan`` Pallas kernel.
+
+    The [T, 3] triple array is staged to the device once per store version;
+    every scan then evaluates a constant/wildcard mask on-device (VPU on
+    TPU, interpret mode on CPU) followed by host-side compaction and
+    repeated-variable filters. ``bt`` is the stream block size.
+    """
+
+    name = "jax"
+
+    # device copies of store triple arrays kept alive at once: one engine
+    # serves cloud + K edge stores interleaved, so a single slot would
+    # re-upload the full [T, 3] array on every store switch within a round
+    MAX_STAGED_STORES = 8
+
+    def __init__(self, bt: int = 2048, interpret: bool | None = None) -> None:
+        import jax
+
+        self.bt = int(bt)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        self.interpret = bool(interpret)
+        self._staged: OrderedDict[int, object] = OrderedDict()  # version->arr
+
+    def _triples(self, store: TripleStore):
+        import jax.numpy as jnp
+
+        arr = self._staged.get(store.version)
+        if arr is None:
+            if max(store.num_entities, store.num_predicates) >= 2 ** 31:
+                raise ValueError("dictionary ids exceed int32 kernel range")
+            arr = jnp.asarray(store.triples(), dtype=jnp.int32)
+            self._staged[store.version] = arr
+            while len(self._staged) > self.MAX_STAGED_STORES:
+                self._staged.popitem(last=False)
+        else:
+            self._staged.move_to_end(store.version)
+        return arr
+
+    @staticmethod
+    def _pattern_vec(tp: TriplePattern) -> np.ndarray:
+        return np.asarray(
+            [tp.s if isinstance(tp.s, int) else -1,
+             tp.p if isinstance(tp.p, int) else -1,
+             tp.o if isinstance(tp.o, int) else -1], dtype=np.int32)
+
+    @staticmethod
+    def _repeated_var_filter(store: TripleStore, tp: TriplePattern,
+                             tids: np.ndarray) -> np.ndarray:
+        if isinstance(tp.s, str) and isinstance(tp.o, str) and tp.s == tp.o:
+            tids = tids[store.s[tids] == store.o[tids]]
+        if isinstance(tp.s, str) and isinstance(tp.p, str) and tp.s == tp.p:
+            tids = tids[store.s[tids] == store.p[tids]]
+        if isinstance(tp.o, str) and isinstance(tp.p, str) and tp.o == tp.p:
+            tids = tids[store.o[tids] == store.p[tids]]
+        return tids
+
+    def candidates(self, store: TripleStore, tp: TriplePattern) -> np.ndarray:
+        from ..kernels.triple_scan import triple_scan
+        import jax.numpy as jnp
+
+        mask = triple_scan(self._triples(store),
+                           jnp.asarray(self._pattern_vec(tp)),
+                           bt=self.bt, interpret=self.interpret)
+        tids = np.flatnonzero(np.asarray(mask)).astype(np.int64)
+        return self._repeated_var_filter(store, tp, tids)
+
+    def prescan(self, store: TripleStore,
+                tps: list[TriplePattern]) -> dict[tuple, np.ndarray]:
+        from ..kernels.triple_scan import triple_scan_many
+        import jax.numpy as jnp
+
+        uniq: dict[tuple, TriplePattern] = {}
+        for tp in tps:
+            uniq.setdefault(scan_key(tp), tp)
+        if not uniq:
+            return {}
+        pats = np.stack([self._pattern_vec(tp) for tp in uniq.values()])
+        masks = np.asarray(triple_scan_many(
+            self._triples(store), jnp.asarray(pats),
+            bt=self.bt, interpret=self.interpret))
+        out: dict[tuple, np.ndarray] = {}
+        for i, (k, tp) in enumerate(uniq.items()):
+            tids = np.flatnonzero(masks[i]).astype(np.int64)
+            out[k] = self._repeated_var_filter(store, tp, tids)
+        return out
+
+
+_BACKENDS: dict[str, Callable[..., MatcherBackend]] = {}
+
+
+def register_backend(name: str,
+                     factory: Callable[..., MatcherBackend]) -> None:
+    _BACKENDS[name] = factory
+
+
+def available_backends() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+def get_backend(name: str, **kw) -> MatcherBackend:
+    if name not in _BACKENDS:
+        raise KeyError(f"unknown matcher backend {name!r}; "
+                       f"have {available_backends()}")
+    return _BACKENDS[name](**kw)
+
+
+register_backend("numpy", NumpyBackend)
+register_backend("jax", JaxBackend)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class EngineStats:
+    queries: int = 0
+    batches: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_evictions: int = 0
+    scans_requested: int = 0
+    scans_executed: int = 0
+    exec_seconds: float = 0.0
+
+    @property
+    def scans_deduped(self) -> int:
+        return self.scans_requested - self.scans_executed
+
+
+class QueryEngine:
+    """Batched BGP executor with scan dedup and an LRU result cache.
+
+    See the module docstring for batching semantics and cache keying.
+    ``cache_size`` bounds the number of memoized :class:`MatchResult`s
+    (0 disables caching). One engine instance may serve many stores — cache
+    keys embed ``store.version``.
+    """
+
+    def __init__(self, backend: str | MatcherBackend = "numpy",
+                 cache_size: int = 256, max_rows: int = 5_000_000,
+                 cache_bytes: int = 512 * 1024 * 1024) -> None:
+        self.backend = (backend if isinstance(backend, MatcherBackend)
+                        else get_backend(backend))
+        self.cache_size = int(cache_size)
+        # one result near max_rows can be hundreds of MB of int64 bindings,
+        # so the LRU is bounded by bytes as well as entry count
+        self.cache_bytes = int(cache_bytes)
+        self.max_rows = int(max_rows)
+        self.stats = EngineStats()
+        self._cache: OrderedDict[tuple, MatchResult] = OrderedDict()
+        self._cached_bytes = 0
+
+    # -- cache ---------------------------------------------------------------
+    def clear_cache(self) -> None:
+        self._cache.clear()
+        self._cached_bytes = 0
+
+    def _cache_get(self, key: tuple) -> MatchResult | None:
+        res = self._cache.get(key)
+        if res is not None:
+            self._cache.move_to_end(key)
+            self.stats.cache_hits += 1
+        else:
+            self.stats.cache_misses += 1
+        return res
+
+    @staticmethod
+    def _result_bytes(res: MatchResult) -> int:
+        return int(res.bindings.nbytes + res.edge_ids.nbytes)
+
+    def _cache_put(self, key: tuple, res: MatchResult) -> None:
+        if self.cache_size <= 0:
+            return
+        nbytes = self._result_bytes(res)
+        if nbytes > self.cache_bytes:
+            return                       # would evict everything; skip
+        self._cache[key] = res
+        self._cache.move_to_end(key)
+        self._cached_bytes += nbytes
+        while (len(self._cache) > self.cache_size
+               or self._cached_bytes > self.cache_bytes):
+            _, old = self._cache.popitem(last=False)
+            self._cached_bytes -= self._result_bytes(old)
+            self.stats.cache_evictions += 1
+
+    @staticmethod
+    def _remap(res: MatchResult, canon_to_actual: dict[str, str]
+               ) -> MatchResult:
+        """Re-label a cached canonical result with a query's variable names."""
+        return MatchResult(
+            var_names=[canon_to_actual[v] for v in res.var_names],
+            bindings=res.bindings, edge_ids=res.edge_ids)
+
+    # -- execution -----------------------------------------------------------
+    def execute(self, store: TripleStore, q: QueryGraph) -> MatchResult:
+        return self.execute_batch(store, [q])[0]
+
+    def execute_batch(self, store: TripleStore,
+                      queries: list[QueryGraph]) -> list[MatchResult]:
+        """Execute ``queries`` against ``store``; results align by index.
+
+        Identical candidate scans run once per batch; alpha-equivalent
+        queries resolve from the LRU cache (within the batch and across
+        calls, until the store version changes).
+        """
+        t0 = time.perf_counter()
+        self.stats.batches += 1
+        self.stats.queries += len(queries)
+
+        keyed = [query_key(q) for q in queries]
+        misses = [i for i, (ck, _) in enumerate(keyed)
+                  if (store.version, ck) not in self._cache]
+
+        # scan memo for this batch: executed once per distinct scan key
+        memo: dict[tuple, np.ndarray] = {}
+        if misses:
+            need = [tp for i in misses for tp in queries[i].patterns]
+            self.stats.scans_requested += len(need)
+            memo.update(self.backend.prescan(store, need))
+            self.stats.scans_executed += len(memo)
+
+        def scan(st: TripleStore, tp: TriplePattern) -> np.ndarray:
+            k = scan_key(tp)
+            if k not in memo:          # cache-missed pattern added mid-join
+                self.stats.scans_requested += 1
+                self.stats.scans_executed += 1
+                memo[k] = self.backend.candidates(st, tp)
+            return memo[k]
+
+        out: list[MatchResult | None] = [None] * len(queries)
+        for i, q in enumerate(queries):
+            ck, canon_to_actual = keyed[i]
+            cached = self._cache_get((store.version, ck))
+            if cached is None:
+                # execute under canonical names so the cached entry is
+                # independent of this query's variable spelling
+                actual_to_canon = {a: c for c, a in canon_to_actual.items()}
+                canon_q = QueryGraph(
+                    patterns=[TriplePattern(
+                        *(actual_to_canon.get(t, t) if isinstance(t, str)
+                          else t for t in (tp.s, tp.p, tp.o)))
+                        for tp in q.patterns],
+                    projection=[])
+                cached = match_bgp(store, canon_q, max_rows=self.max_rows,
+                                   candidates=scan)
+                self._cache_put((store.version, ck), cached)
+            out[i] = self._remap(cached, canon_to_actual)
+        self.stats.exec_seconds += time.perf_counter() - t0
+        return out

@@ -129,8 +129,18 @@ def _order_patterns(store: TripleStore, q: QueryGraph) -> list[int]:
 
 
 def match_bgp(store: TripleStore, q: QueryGraph,
-              max_rows: int = 5_000_000) -> MatchResult:
-    """All homomorphic matches of ``q`` over ``store`` (paper Def. 3)."""
+              max_rows: int = 5_000_000,
+              candidates=None) -> MatchResult:
+    """All homomorphic matches of ``q`` over ``store`` (paper Def. 3).
+
+    ``candidates``: optional ``(store, tp) -> tids`` override for the
+    per-pattern candidate scan — how :mod:`repro.sparql.engine` routes scans
+    through a pluggable backend (NumPy slicing or the ``triple_scan`` Pallas
+    kernel) and deduplicates them across a query batch. Must return exactly
+    the triple ids :func:`_candidates` would (any order).
+    """
+    if candidates is None:
+        candidates = _candidates
     order = _order_patterns(store, q)
     var_names: list[str] = []
     bindings = np.zeros((1, 0), dtype=np.int64)   # one empty row = unit table
@@ -138,7 +148,7 @@ def match_bgp(store: TripleStore, q: QueryGraph,
 
     for pat_i in order:
         tp = q.patterns[pat_i]
-        cand = _candidates(store, tp)
+        cand = candidates(store, tp)
         cs, cp, co = store.s[cand], store.p[cand], store.o[cand]
 
         svar = tp.s if isinstance(tp.s, str) else None

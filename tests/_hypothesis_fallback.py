@@ -1,0 +1,110 @@
+"""Deterministic mini property-testing engine — fallback when ``hypothesis``
+is not installed.
+
+``hypothesis`` is the declared test dependency (requirements-test.txt) and
+is preferred: it shrinks failures and explores adversarially. This module
+implements just the slice of its API the suite uses (``given``, ``settings``,
+``strategies.{integers, lists, booleans, sampled_from, randoms, composite}``)
+so the property tests still *run* — with a fixed seed and no shrinking —
+on environments where the dependency cannot be installed. Draw semantics
+match hypothesis closely enough that the same test bodies work unchanged.
+
+Usage (in test modules)::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+from types import SimpleNamespace
+
+_DEFAULT_MAX_EXAMPLES = 50
+_SEED = 0xC0FFEE
+
+
+class Strategy:
+    """A value generator: ``example(rng) -> value``."""
+
+    def __init__(self, fn):
+        self._fn = fn
+
+    def example(self, rng: random.Random):
+        return self._fn(rng)
+
+
+def _integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def _sampled_from(seq) -> Strategy:
+    items = list(seq)
+    return Strategy(lambda rng: items[rng.randrange(len(items))])
+
+
+def _lists(elements: Strategy, min_size: int = 0,
+           max_size: int | None = None) -> Strategy:
+    hi = min_size + 10 if max_size is None else max_size
+    return Strategy(lambda rng: [elements.example(rng)
+                                 for _ in range(rng.randint(min_size, hi))])
+
+
+def _randoms() -> Strategy:
+    return Strategy(lambda rng: random.Random(rng.getrandbits(64)))
+
+
+def _composite(fn):
+    """``@st.composite``: ``fn(draw, *args)`` -> a Strategy factory."""
+    @functools.wraps(fn)
+    def make(*args, **kwargs):
+        def gen(rng):
+            return fn(lambda strat: strat.example(rng), *args, **kwargs)
+        return Strategy(gen)
+    return make
+
+
+strategies = SimpleNamespace(
+    integers=_integers, booleans=_booleans, sampled_from=_sampled_from,
+    lists=_lists, randoms=_randoms, composite=_composite,
+)
+# tests also spell `@st.composite` at module level via `strategies as st`
+st = strategies
+
+
+def settings(**kwargs):
+    """Records ``max_examples``; other knobs (deadline, ...) are ignored."""
+    def deco(fn):
+        fn._fallback_settings = dict(kwargs)
+        return fn
+    return deco
+
+
+def given(*strats: Strategy):
+    """Run the test body over ``max_examples`` seeded draws.
+
+    The wrapper takes no parameters (drawn values are appended
+    positionally), so pytest does not mistake strategy arguments for
+    fixtures — mirroring hypothesis's own signature rewriting.
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            cfg = (getattr(wrapper, "_fallback_settings", None)
+                   or getattr(fn, "_fallback_settings", {}))
+            n = cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                fn(*(s.example(rng) for s in strats))
+        # functools.wraps sets __wrapped__, which inspect.signature follows —
+        # pytest would then see the original parameters and demand fixtures
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

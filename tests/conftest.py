@@ -1,0 +1,5 @@
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running smoke tests (excluded from the fast CI lane "
+        "via -m 'not slow')")

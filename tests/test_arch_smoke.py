@@ -11,6 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow   # full-arch numerics: minutes on CPU
+
 from repro.configs.registry import ARCH_IDS, all_cells, get_spec
 from repro.launch.train import make_batch_iter, reduce_config
 from repro.models.common import AxisRules

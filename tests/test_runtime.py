@@ -172,8 +172,8 @@ def test_elastic_restore_across_meshes(tmp_path):
     d = str(tmp_path / "ckpt")
     state = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
     save_checkpoint(d, 1, state)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_compat_mesh
+    mesh = make_compat_mesh((1, 1), ("data", "model"))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     step, restored = restore_checkpoint(d, state, shardings=sh)
     assert np.allclose(restored["w"], np.asarray(state["w"]))
