@@ -1,39 +1,56 @@
-"""Per-backend batch throughput of the BGP query engine.
+"""Per-backend batch throughput of the BGP query engine, with a shard axis.
 
 Contract (benchmarks/common.py): ``name,us_per_call,derived`` CSV rows —
-``us_per_call`` is microseconds per *query*. Modes:
+``us_per_call`` is microseconds per *query* (per *scan* for ``scan_*`` rows).
+Modes:
 
-- ``loop``         per-query ``match_bgp`` calls (the pre-engine path)
-- ``numpy-batch``  engine batch, NumPy backend, cold cache
-- ``numpy-warm``   same batch again: LRU result-cache hits
-- ``jax-batch``    engine batch, ``triple_scan`` Pallas backend (interpret
-                   mode off-TPU — compiled on TPU; the CPU number is an
-                   upper bound and reported for completeness)
+- ``engine_loop``         per-query ``match_bgp`` calls (the pre-engine path)
+- ``engine_numpy_batch``  engine batch, NumPy backend, cold cache
+- ``engine_numpy_warm``   same batch again: LRU result-cache hits
+- ``engine_jax_batch``    engine batch, ``triple_scan`` Pallas backend
+                          (interpret mode off-TPU — compiled on TPU; the CPU
+                          number is an upper bound, reported for completeness)
+- ``..._s{S}``            the same against a ``ShardedTripleStore`` with S
+                          predicate-hash shards
+- ``scan_{backend}_*``    candidate-scan microbench: one ``prescan`` of the
+                          workload's deduplicated bound-predicate patterns.
+                          This isolates shard pruning: on the monolithic
+                          store the JAX backend streams all T triples per
+                          scan, on the sharded store only the owning shard's
+                          ~T/S — the sharded scan should win on
+                          bound-predicate workloads (the common case).
 
 The workload repeats a pool of template queries (users re-issue hot
 queries), so scan dedup and the result cache both engage — the acceptance
-target is ``numpy-batch`` beating ``loop`` on a >=64-query batch over a
->=100k-triple store.
+targets are ``engine_numpy_batch`` beating ``engine_loop`` on a >=64-query
+batch over a >=100k-triple store, and sharded ``scan_jax`` beating the
+monolithic scan at the same scale.
+
+Timings are also written as machine-readable JSON (``--json``, default
+``BENCH_engine.json``) so the perf trajectory is tracked across PRs; CI
+uploads it as an artifact.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 from repro.rdf.generator import generate_watdiv_like, workload_sparql
-from repro.sparql.engine import QueryEngine
+from repro.rdf.sharding import ShardedTripleStore
+from repro.sparql.engine import QueryEngine, get_backend, scan_key
 from repro.sparql.matcher import match_bgp
 from repro.sparql.query import parse_sparql
 
 
-def bench(fn, n_queries: int, repeats: int = 3) -> float:
+def bench(fn, n_calls: int, repeats: int = 3) -> float:
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
         fn()
         best = min(best, time.perf_counter() - t0)
-    return best / n_queries
+    return best / n_calls
 
 
 def main() -> None:
@@ -45,19 +62,36 @@ def main() -> None:
     ap.add_argument("--unique", type=int, default=16,
                     help="distinct query texts in the pool")
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--shards", type=str, default="4,8",
+                    help="comma-separated shard counts for the sharded-store "
+                         "axis ('' disables)")
+    ap.add_argument("--json", type=str, default="BENCH_engine.json",
+                    help="write timings as machine-readable JSON "
+                         "('' disables)")
     ap.add_argument("--skip-jax", action="store_true",
                     help="skip the interpret-mode JAX backend (slow off-TPU)")
     args = ap.parse_args()
     if args.batch < 1 or args.unique < 1 or args.scale <= 0:
         ap.error("--batch/--unique must be >= 1 and --scale > 0")
+    shard_counts = [int(x) for x in args.shards.split(",") if x.strip()]
+    if any(s < 1 for s in shard_counts):
+        ap.error("--shards entries must be >= 1")
 
     g = generate_watdiv_like(scale=args.scale, seed=0)
     texts = workload_sparql(g, args.unique, seed=123)
     pool = [parse_sparql(t, g.dictionary) for t in texts]
     queries = [pool[i % len(pool)] for i in range(args.batch)]
+    stores = [("", g.store)]
+    stores += [(f"_s{S}", ShardedTripleStore.from_store(g.store, S))
+               for S in shard_counts]
+    # deduplicated candidate scans of the pool — all templates use bound
+    # predicates, so this is the partition-pruned common case
+    scan_tps = list({scan_key(tp): tp
+                     for q in pool for tp in q.patterns}.values())
     print(f"# store: {g.store.num_triples} triples, "
           f"{g.store.num_entities} entities; batch {len(queries)} "
-          f"({len(pool)} unique)")
+          f"({len(pool)} unique, {len(scan_tps)} distinct scans); "
+          f"shards {shard_counts or '-'}")
 
     rows: list[tuple[str, float, str]] = []
 
@@ -65,17 +99,33 @@ def main() -> None:
                    len(queries), args.repeats)
     rows.append(("engine_loop", t_loop * 1e6, "backend=none"))
 
-    eng = QueryEngine(backend="numpy")
-    # cold: fresh cache each repeat
-    def cold():
-        eng.clear_cache()
-        eng.execute_batch(g.store, queries)
-    t_cold = bench(cold, len(queries), args.repeats)
-    s = eng.stats
-    rows.append(("engine_numpy_batch", t_cold * 1e6,
-                 f"backend=numpy|scans_deduped={s.scans_deduped}"
-                 f"|speedup_vs_loop={t_loop / t_cold:.2f}x"))
+    t_scan: dict[tuple[str, str], float] = {}   # (backend, suffix) -> s/scan
 
+    def bench_backend(backend: str, suffix: str, store, repeats: int) -> float:
+        eng = QueryEngine(backend=backend)
+
+        def cold():
+            eng.clear_cache()
+            eng.execute_batch(store, queries)
+        t_cold = bench(cold, len(queries), repeats)
+        s = eng.stats
+        rows.append((f"engine_{backend}_batch{suffix}", t_cold * 1e6,
+                     f"backend={backend}|scans_deduped={s.scans_deduped}"
+                     f"|speedup_vs_loop={t_loop / t_cold:.2f}x"))
+        # scan microbench: prescan the deduplicated bound-predicate pool
+        # directly (bypasses the engine's scan LRU)
+        be = eng.backend
+        be.prescan(store, scan_tps)              # stage arrays / compile
+        t_s = bench(lambda: be.prescan(store, scan_tps), len(scan_tps),
+                    repeats)
+        t_scan[(backend, suffix)] = t_s
+        rows.append((f"scan_{backend}{suffix}", t_s * 1e6,
+                     f"backend={backend}|scans={len(scan_tps)}"))
+        return t_cold
+
+    t_cold = bench_backend("numpy", "", g.store, args.repeats)
+
+    eng = QueryEngine(backend="numpy")
     eng.execute_batch(g.store, queries)          # prime
     t_warm = bench(lambda: eng.execute_batch(g.store, queries),
                    len(queries), args.repeats)
@@ -83,23 +133,54 @@ def main() -> None:
                  f"backend=numpy|cache=hit"
                  f"|speedup_vs_loop={t_loop / t_warm:.2f}x"))
 
+    for suffix, store in stores[1:]:
+        bench_backend("numpy", suffix, store, args.repeats)
+
     if not args.skip_jax:
         import jax
-        jeng = QueryEngine(backend="jax")
-        def jax_cold():
-            jeng.clear_cache()
-            jeng.execute_batch(g.store, queries)
-        t_jax = bench(jax_cold, len(queries), max(1, args.repeats - 2))
         mode = ("compiled" if jax.default_backend() == "tpu"
                 else "interpret")
-        rows.append(("engine_jax_batch", t_jax * 1e6,
-                     f"backend=jax|pallas={mode}"))
+        jax_repeats = max(1, args.repeats - 2)
+        for suffix, store in stores:
+            bench_backend("jax", suffix, store, jax_repeats)
+            rows[-2] = (rows[-2][0], rows[-2][1],
+                        rows[-2][2] + f"|pallas={mode}")
 
     for name, us, derived in rows:
         qps = 1e6 / us
         print(f"{name},{us:.1f},{derived}|qps={qps:.0f}")
 
+    if args.json:
+        payload = {
+            "meta": {
+                "bench": "bench_engine",
+                "timestamp": time.time(),
+                "scale": args.scale,
+                "num_triples": int(g.store.num_triples),
+                "num_entities": int(g.store.num_entities),
+                "batch": len(queries),
+                "unique": len(pool),
+                "distinct_scans": len(scan_tps),
+                "shards": shard_counts,
+                "repeats": args.repeats,
+                "jax": not args.skip_jax,
+            },
+            "rows": [{"name": n, "us_per_call": round(us, 3),
+                      "qps": round(1e6 / us, 1), "derived": d}
+                     for n, us, d in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}")
+
     assert t_cold < t_loop, "batched engine should beat the per-query loop"
+    if (not args.skip_jax and shard_counts
+            and g.store.num_triples >= 100_000):
+        mono = t_scan[("jax", "")]
+        best_s = min(t_scan[("jax", f"_s{S}")] for S in shard_counts)
+        assert best_s < mono, (
+            f"sharded bound-predicate scan ({best_s * 1e6:.0f}us) should "
+            f"beat the monolithic scan ({mono * 1e6:.0f}us)")
 
 
 if __name__ == "__main__":

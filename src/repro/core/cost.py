@@ -14,7 +14,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..rdf.graph import TripleStore
+from ..rdf.graph import RDFStore
 from ..sparql.matcher import estimate_pattern_cardinality
 from ..sparql.query import QueryGraph
 
@@ -133,7 +133,7 @@ CYCLES_BASE = 5e4            # fixed per-query overhead (parse, plan)
 BITS_PER_CELL = 64.0
 
 
-def estimate_query_cost(store: TripleStore, q: QueryGraph,
+def estimate_query_cost(store: RDFStore, q: QueryGraph,
                         ) -> tuple[float, float]:
     """(c_n cycles, w_n bits) via join-order cardinality simulation.
 
@@ -173,7 +173,7 @@ def estimate_query_cost(store: TripleStore, q: QueryGraph,
     return float(c), float(w)
 
 
-def measured_query_cost(store: TripleStore, q: QueryGraph,
+def measured_query_cost(store: RDFStore, q: QueryGraph,
                         engine=None) -> tuple[float, float, int]:
     """(c_n cycles-equivalent, w_n bits, n_matches) by actually executing.
 
@@ -192,7 +192,7 @@ def measured_query_cost(store: TripleStore, q: QueryGraph,
     return float(c), w, n_rows
 
 
-def measured_query_cost_batch(store: TripleStore, queries: list[QueryGraph],
+def measured_query_cost_batch(store: RDFStore, queries: list[QueryGraph],
                               engine) -> tuple[np.ndarray, np.ndarray,
                                                np.ndarray]:
     """Vectorized measured costs ([N] c, [N] w, [N] n_matches) for a batch.

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..rdf.graph import TripleStore
+from ..rdf.graph import RDFStore
 from ..sparql.matcher import match_bgp
 from ..sparql.query import QueryGraph, TriplePattern
 from .pattern import VAR_PRED_LABEL, Pattern
@@ -37,7 +37,7 @@ def pattern_to_query(p: Pattern) -> QueryGraph:
     return QueryGraph(patterns=pats, projection=[])
 
 
-def induced_edge_ids(store: TripleStore, patterns: list[Pattern],
+def induced_edge_ids(store: RDFStore, patterns: list[Pattern],
                      max_rows: int = 20_000_000) -> np.ndarray:
     """Exact Def. 5 edge set: union of matched edge ids over all patterns."""
     parts: list[np.ndarray] = []
@@ -50,8 +50,8 @@ def induced_edge_ids(store: TripleStore, patterns: list[Pattern],
     return np.unique(np.concatenate(parts))
 
 
-def induced_subgraph(store: TripleStore, patterns: list[Pattern],
-                     method: str = "exact") -> TripleStore:
+def induced_subgraph(store: RDFStore, patterns: list[Pattern],
+                     method: str = "exact") -> RDFStore:
     if method == "exact":
         eids = induced_edge_ids(store, patterns)
     elif method == "semijoin":
@@ -65,7 +65,7 @@ def induced_subgraph(store: TripleStore, patterns: list[Pattern],
 # semijoin full reducer (beyond-paper fast path)
 # ---------------------------------------------------------------------------
 
-def _semijoin_reduce_one(store: TripleStore, p: Pattern,
+def _semijoin_reduce_one(store: RDFStore, p: Pattern,
                          n_rounds: int | None = None) -> np.ndarray:
     """Edge ids surviving iterated semijoins for one pattern.
 
@@ -122,7 +122,7 @@ def _semijoin_reduce_one(store: TripleStore, p: Pattern,
     return np.unique(np.concatenate(cand))
 
 
-def induced_edge_ids_semijoin(store: TripleStore,
+def induced_edge_ids_semijoin(store: RDFStore,
                               patterns: list[Pattern]) -> np.ndarray:
     parts = [_semijoin_reduce_one(store, p) for p in patterns]
     parts = [x for x in parts if len(x)]

@@ -17,8 +17,6 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..rdf.graph import TripleStore
-from .induced import induced_subgraph
 from .pattern import Pattern
 
 

@@ -20,7 +20,7 @@ import numpy as np
 from ..core.induced import induced_edge_ids
 from ..core.pattern import Pattern, PatternIndex, pattern_of
 from ..core.placement import DynamicPlacement
-from ..rdf.graph import TripleStore
+from ..rdf.graph import RDFStore, triples_size_bytes
 from ..sparql.engine import QueryEngine
 from ..sparql.matcher import MatchResult
 from ..sparql.query import QueryGraph
@@ -33,7 +33,7 @@ class ExecutionRecord:
     result_bits: float
 
 
-def _execute_batch(store: TripleStore, engine: QueryEngine,
+def _execute_batch(store: RDFStore, engine: QueryEngine,
                    queries: list[QueryGraph],
                    ) -> list[tuple[MatchResult, ExecutionRecord]]:
     """Run one server's batch through the engine; wall time is apportioned
@@ -48,9 +48,10 @@ def _execute_batch(store: TripleStore, engine: QueryEngine,
 
 
 class CloudServer:
-    """Holds the complete RDF graph G."""
+    """Holds the complete RDF graph G — monolithic or sharded
+    (any :class:`RDFStore`)."""
 
-    def __init__(self, store: TripleStore,
+    def __init__(self, store: RDFStore,
                  engine: QueryEngine | None = None) -> None:
         self.store = store
         self.engine = engine or QueryEngine()
@@ -79,28 +80,32 @@ class EdgeServer:
         self.engine = engine or QueryEngine()
         self.placement = DynamicPlacement(budget_bytes=self.budget)
         self.index = PatternIndex()
-        self.store: TripleStore | None = None
+        self.store: RDFStore | None = None
         self._resident: dict[tuple, Pattern] = {}
         self._edge_ids: dict[tuple, np.ndarray] = {}
 
     # -- deployment ---------------------------------------------------------
-    def measure_pattern(self, cloud_store: TripleStore, p: Pattern,
+    def measure_pattern(self, cloud_store: RDFStore, p: Pattern,
                         size_cache: dict[tuple, tuple] | None = None) -> int:
         """Compute |G[{p}]| bytes (cached across servers by pattern key)."""
         if size_cache is not None and p.key in size_cache:
             eids, nbytes = size_cache[p.key]
         else:
             eids = induced_edge_ids(cloud_store, [p])
-            nbytes = int(len(eids) * 3 * 8 * 1.25)
+            nbytes = triples_size_bytes(len(eids))
             if size_cache is not None:
                 size_cache[p.key] = (eids, nbytes)
         self._edge_ids[p.key] = eids
         self.placement.set_size(p, nbytes)
         return nbytes
 
-    def deploy(self, cloud_store: TripleStore,
+    def deploy(self, cloud_store: RDFStore,
                patterns: list[Pattern]) -> None:
-        """Materialize G[P] for the given resident set."""
+        """Materialize G[P] for the given resident set.
+
+        Built through the :class:`RDFStore` protocol: ``subgraph`` preserves
+        the cloud store's kind, so a sharded cloud yields sharded
+        pattern-induced edge stores (possibly with empty shards)."""
         self._resident = {p.key: p for p in patterns if p.indexable}
         self.index = PatternIndex()
         all_eids = [self._edge_ids[k] for k in self._resident
@@ -112,7 +117,7 @@ class EdgeServer:
             self.index.add(p, self.server_id)
         self.placement.resident = set(self._resident)
 
-    def rebalance(self, cloud_store: TripleStore,
+    def rebalance(self, cloud_store: RDFStore,
                   size_cache: dict | None = None) -> tuple[int, int]:
         """Dynamic update (paper §3.2): apply the placement policy.
 

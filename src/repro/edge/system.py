@@ -24,7 +24,7 @@ from ..core.cost import (QueryTasks, SystemParams, estimate_query_cost)
 from ..core.pattern import Pattern, pattern_of
 from ..core.placement import PatternProfile, greedy_knapsack
 from ..core.scheduler import ScheduleResult, schedule
-from ..rdf.graph import TripleStore
+from ..rdf.graph import RDFStore
 from ..sparql.engine import QueryEngine
 from ..sparql.matcher import MatchResult
 from ..sparql.query import QueryGraph, parse_sparql
@@ -65,9 +65,14 @@ class RoundReport:
 
 
 class EdgeCloudSystem:
-    """K edge servers + cloud + N users, with pattern-based data placement."""
+    """K edge servers + cloud + N users, with pattern-based data placement.
 
-    def __init__(self, store: TripleStore, dictionary, params: SystemParams,
+    ``store`` may be a monolithic :class:`~repro.rdf.graph.TripleStore` or a
+    :class:`~repro.rdf.sharding.ShardedTripleStore`; edge deployments inherit
+    the cloud store's kind through ``subgraph``.
+    """
+
+    def __init__(self, store: RDFStore, dictionary, params: SystemParams,
                  storage_budgets: np.ndarray | int,
                  backend: str = "numpy",
                  engine: QueryEngine | None = None) -> None:

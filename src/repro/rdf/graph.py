@@ -1,11 +1,24 @@
-"""Dictionary-encoded triple store with vector-friendly indexes.
+"""Dictionary-encoded RDF storage: the :class:`RDFStore` protocol and the
+single-buffer :class:`TripleStore` implementation.
 
-Storage layout is three parallel int arrays (s, p, o) plus derived indexes:
+Every consumer of RDF data in this repo — the BGP matcher, the batched query
+engine and its backends, pattern-induced subgraph construction, placement
+accounting — programs against :class:`RDFStore`, the accessor surface listed
+on the protocol below. Two implementations exist:
 
-- ``by_pred``  : CSR grouping of triple ids by predicate (candidate scans for
-                 bound-predicate triple patterns — the common case).
-- per-predicate triples sorted by subject and by object, enabling
-  ``searchsorted`` merge joins during BGP matching.
+- :class:`TripleStore` (here): one monolithic buffer. Storage layout is three
+  parallel int arrays (s, p, o) plus derived indexes:
+
+  * CSR grouping of triple ids by predicate (``pred_tids`` — candidate scans
+    for bound-predicate triple patterns, the common case);
+  * per-predicate triples sorted by subject and by object (``pred_index``),
+    enabling ``searchsorted`` merge joins during BGP matching.
+
+- :class:`repro.rdf.sharding.ShardedTripleStore`: S hash-partitioned-by-
+  predicate ``TripleStore`` shards behind the same protocol. Triple ids stay
+  *global* (shard-concatenation order), so joins and subgraph extraction are
+  unchanged, while candidate scans prune to the single shard owning a bound
+  predicate (and fan out across shards only for wildcard predicates).
 
 Everything is a dense NumPy array so the matcher is pure data-parallel array
 code (the TPU adaptation of gStore's pointer-based matching; see DESIGN.md §3).
@@ -15,6 +28,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
+from typing import Protocol, runtime_checkable
 
 import numpy as np
 
@@ -23,6 +37,17 @@ import numpy as np
 # sound cache-invalidation key: any result memoized against version v can
 # never be served for a store with different contents.
 _STORE_VERSIONS = itertools.count()
+
+
+def triples_size_bytes(n_triples: int) -> int:
+    """Modeled storage cost of ``n_triples`` triples.
+
+    Matches an on-disk layout of 3x int64 per triple plus ~25% index overhead
+    (gStore's VS-tree etc. are heavier; this is conservative). Shared by
+    ``RDFStore.size_bytes`` implementations and the placement knapsack so
+    byte accounting agrees regardless of store kind.
+    """
+    return int(n_triples * 3 * 8 * 1.25)
 
 
 @dataclass
@@ -34,6 +59,44 @@ class PredIndex:
     s_sorted: np.ndarray    # subjects in ascending order (len == len(tids))
     o_order: np.ndarray     # tids permuted so that o is ascending
     o_sorted: np.ndarray    # objects in ascending order
+
+
+@runtime_checkable
+class RDFStore(Protocol):
+    """Accessor surface the matcher / engine / placement stack consumes.
+
+    Triple ids are *global*: ``s[t], p[t], o[t]`` is triple ``t`` for any id
+    returned by ``pred_tids`` / ``pred_index`` / a candidate scan, whatever
+    the physical layout behind it. ``version`` is a hashable token unique to
+    the store's contents (stores are immutable after construction), used as
+    a cache-invalidation key by :class:`repro.sparql.engine.QueryEngine` —
+    for a sharded store it is a composite over the shard versions.
+    """
+
+    s: np.ndarray
+    p: np.ndarray
+    o: np.ndarray
+    num_entities: int
+    num_predicates: int
+    pred_count: np.ndarray
+    pred_distinct_s: np.ndarray
+    pred_distinct_o: np.ndarray
+
+    @property
+    def num_triples(self) -> int: ...
+
+    @property
+    def version(self): ...
+
+    def pred_tids(self, pid: int) -> np.ndarray: ...
+
+    def pred_index(self, pid: int) -> PredIndex: ...
+
+    def triples(self) -> np.ndarray: ...
+
+    def size_bytes(self) -> int: ...
+
+    def subgraph(self, edge_ids: np.ndarray) -> "RDFStore": ...
 
 
 class TripleStore:
@@ -107,12 +170,8 @@ class TripleStore:
         return np.stack([self.s, self.p, self.o], axis=1)
 
     def size_bytes(self) -> int:
-        """Storage cost of this (sub)graph — used by the placement knapsack.
-
-        Matches an on-disk layout of 3x int64 per triple plus ~25% index
-        overhead (gStore's VS-tree etc. are heavier; this is conservative).
-        """
-        return int(self._T * 3 * 8 * 1.25)
+        """Storage cost of this (sub)graph — used by the placement knapsack."""
+        return triples_size_bytes(self._T)
 
     # -- subgraph extraction ---------------------------------------------------
     def subgraph(self, edge_ids: np.ndarray) -> "TripleStore":

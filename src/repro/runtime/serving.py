@@ -97,10 +97,14 @@ class OffloadServingPool:
 def make_sparql_runner(store, engine) -> Callable:
     """Replica runner serving SPARQL BGP payloads through a query engine.
 
-    ``payload`` items are :class:`repro.sparql.query.QueryGraph`s; the whole
-    per-replica assignment executes as ONE ``engine.execute_batch`` call, so
-    scan dedup and the result cache apply across the admission batch — the
-    SPARQL instantiation of this pool's batch-execution contract.
+    ``store`` is any :class:`repro.rdf.graph.RDFStore` — a monolithic
+    :class:`~repro.rdf.graph.TripleStore` or a
+    :class:`~repro.rdf.sharding.ShardedTripleStore` (whose bound-predicate
+    scans prune to one shard). ``payload`` items are
+    :class:`repro.sparql.query.QueryGraph`s; the whole per-replica assignment
+    executes as ONE ``engine.execute_batch`` call, so scan dedup, the scan
+    LRU, and the result cache apply across the admission batch — the SPARQL
+    instantiation of this pool's batch-execution contract.
     """
     def runner(payloads: list) -> list:
         return engine.execute_batch(store, list(payloads))

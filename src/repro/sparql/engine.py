@@ -6,41 +6,49 @@ rest against G. This module turns the single-query matcher into a serving
 engine with three layers:
 
 **1. Backend registry.** :class:`MatcherBackend` abstracts the per-pattern
-candidate scan — the hot spot that touches every stored triple. Backends are
-registered by name (``register_backend``) and constructed via
-``get_backend(name)``:
+candidate scan — the hot spot that touches every stored triple. Backends take
+any :class:`repro.rdf.graph.RDFStore` (the monolithic :class:`TripleStore` or
+:class:`repro.rdf.sharding.ShardedTripleStore`) and are registered by name
+(``register_backend``) / constructed via ``get_backend(name)``:
 
 - ``"numpy"`` — :class:`NumpyBackend`, the portable per-predicate-slice path
-  (exactly :func:`repro.sparql.matcher._candidates`).
+  (exactly :func:`repro.sparql.matcher._candidates`). On a sharded store it
+  scans shards independently and concatenates global triple ids — one shard
+  for a bound predicate, a fan-out across shards for wildcard predicates.
 - ``"jax"`` — :class:`JaxBackend`, routes scans through the ``triple_scan``
   Pallas kernel (interpret mode on CPU, compiled on TPU). The pattern arrives
   as scalar prefetch, so ONE compiled kernel serves every pattern; batches of
-  deduplicated scans go through ``triple_scan_many`` in a single launch.
+  deduplicated scans go through ``triple_scan_many``. On a sharded store the
+  backend stages *per-shard* device arrays and fuses each shard's scans into
+  one launch per **touched** shard — a bound-predicate scan streams only the
+  owning shard's triples (partition pruning), not the whole store.
 
 Both backends return identical candidate-id *sets* (order may differ), so
 join results are identical as solution multisets.
 
-**2. Batching with scan dedup.** :meth:`QueryEngine.execute_batch` runs many
-queries against one store. Within a batch, candidate scans are keyed by their
-*scan key* — the pattern's constant components plus its repeated-variable
-equality structure (variable *names* don't matter for the scan) — and each
-distinct scan runs once; all queries sharing it reuse the array. The JAX
-backend additionally pre-scans all unique keys of the batch in one fused
-kernel launch.
+**2. Batching with scan dedup + a cross-round scan LRU.** Candidate scans
+are keyed by their *scan key* — the pattern's constant components plus its
+repeated-variable equality structure (variable *names* don't matter for the
+scan). :meth:`QueryEngine.execute_batch` runs each distinct scan of a batch
+once; results additionally land in a byte-bounded LRU keyed
+``(store.version, scan key)``, so hot candidate scans survive *between*
+batches (``scan_cache_hits`` / ``scan_cache_misses`` in
+:class:`EngineStats`). Cached candidate arrays are shared — read-only.
 
 **3. LRU result cache.** Full match results are memoized under the key
 ``(store.version, pattern-key)`` where *pattern-key* is the query's BGP
 canonicalized by renaming variables in first-occurrence order — so
 alpha-equivalent queries (same shape, same constants, different variable
 names) share an entry, while queries differing in any constant do not.
-``store.version`` is a monotone token minted per :class:`TripleStore`
-instance; rebalancing deploys a *new* store, so stale entries can never be
-served (they age out of the LRU). Cached arrays are shared between hits —
-treat :class:`MatchResult` buffers as read-only.
+``store.version`` is a hashable token unique per store instance (a composite
+tuple over shard versions for sharded stores); rebalancing deploys a *new*
+store, so stale entries can never be served (they age out of the LRU).
+Cached arrays are shared between hits — treat :class:`MatchResult` buffers
+as read-only.
 
 Semantics: identical to per-query :func:`repro.sparql.matcher.match_bgp` —
-solution multisets are equal on every backend, asserted against the oracle in
-``tests/test_engine.py``.
+solution multisets are equal on every backend and store kind, asserted
+against the oracle in ``tests/test_engine.py`` / ``tests/test_sharding.py``.
 """
 
 from __future__ import annotations
@@ -52,7 +60,7 @@ from typing import Callable
 
 import numpy as np
 
-from ..rdf.graph import TripleStore
+from ..rdf.graph import RDFStore
 from .matcher import MatchResult, _candidates, match_bgp
 from .query import QueryGraph, TriplePattern
 
@@ -104,18 +112,20 @@ def query_key(q: QueryGraph) -> tuple[tuple, dict[str, str]]:
 class MatcherBackend:
     """Candidate-scan provider behind :class:`QueryEngine`.
 
-    Contract: ``candidates(store, tp)`` returns exactly the triple ids of
-    ``store`` whose constant components match ``tp`` and whose repeated
-    variables (if any) are satisfiable — the same *set* NumPy's
-    ``_candidates`` yields, in any order.
+    Contract: ``candidates(store, tp)`` returns exactly the *global* triple
+    ids of ``store`` whose constant components match ``tp`` and whose
+    repeated variables (if any) are satisfiable — the same *set* NumPy's
+    ``_candidates`` yields, in any order. ``store`` is any
+    :class:`repro.rdf.graph.RDFStore`; shard-aware backends may exploit a
+    sharded store's layout (``store.shards`` / ``store.shard_offsets``).
     """
 
     name = "abstract"
 
-    def candidates(self, store: TripleStore, tp: TriplePattern) -> np.ndarray:
+    def candidates(self, store: RDFStore, tp: TriplePattern) -> np.ndarray:
         raise NotImplementedError
 
-    def prescan(self, store: TripleStore,
+    def prescan(self, store: RDFStore,
                 tps: list[TriplePattern]) -> dict[tuple, np.ndarray]:
         """Scan many deduplicated patterns up front; default: one by one."""
         out: dict[tuple, np.ndarray] = {}
@@ -127,40 +137,79 @@ class MatcherBackend:
 
 
 class NumpyBackend(MatcherBackend):
-    """Portable path: per-predicate CSR slice + constant masks."""
+    """Portable path: per-predicate CSR slice + constant masks.
+
+    Sharded stores are scanned shard-by-shard with local ``_candidates``
+    calls whose results are lifted to global ids — exactly one shard for a
+    bound-predicate pattern, all (non-empty) shards for a wildcard one.
+    """
 
     name = "numpy"
 
-    def candidates(self, store: TripleStore, tp: TriplePattern) -> np.ndarray:
-        return _candidates(store, tp)
+    def candidates(self, store: RDFStore, tp: TriplePattern) -> np.ndarray:
+        shards = getattr(store, "shards", None)
+        if shards is None:
+            return _candidates(store, tp)
+        # A sharded store's global accessors would give the same answer, but
+        # scanning shard-locally is the access shape a distributed deployment
+        # needs (shards on separate hosts have no global arrays) — keep the
+        # fan-out explicit and lift local ids by the shard offset.
+        if isinstance(tp.p, int):       # partition pruning: one owning shard
+            k = store.shard_of_pred(tp.p)
+            return _candidates(shards[k], tp) + store.shard_offsets[k]
+        parts = [_candidates(sh, tp) + off
+                 for sh, off in zip(shards, store.shard_offsets)
+                 if sh.num_triples]
+        return (np.concatenate(parts) if parts
+                else np.zeros(0, dtype=np.int64))
 
 
 class JaxBackend(MatcherBackend):
     """Scans via the ``triple_scan`` Pallas kernel.
 
-    The [T, 3] triple array is staged to the device once per store version;
-    every scan then evaluates a constant/wildcard mask on-device (VPU on
-    TPU, interpret mode on CPU) followed by host-side compaction and
+    [T, 3] triple arrays are staged to the device once per (shard) store
+    version; every scan then evaluates a constant/wildcard mask on-device
+    (VPU on TPU, interpret mode on CPU) followed by host-side compaction and
     repeated-variable filters. ``bt`` is the stream block size.
+
+    On a :class:`~repro.rdf.sharding.ShardedTripleStore` each shard is staged
+    as its own device array, and a scan streams only the shards it can touch:
+    the single predicate-owning shard for bound-predicate patterns, every
+    non-empty shard for wildcard-predicate ones. ``prescan`` groups a batch's
+    deduplicated scans by touched shard and fuses each group through
+    ``triple_scan_many`` — one kernel launch per *touched shard*, not per
+    pattern.
     """
 
     name = "jax"
 
-    # device copies of store triple arrays kept alive at once: one engine
-    # serves cloud + K edge stores interleaved, so a single slot would
-    # re-upload the full [T, 3] array on every store switch within a round
-    MAX_STAGED_STORES = 8
+    # device copies of (shard) triple arrays kept alive at once: one engine
+    # serves cloud + K edge stores interleaved — and a sharded store stages
+    # one array per shard — so a single slot would re-upload [T, 3] arrays
+    # on every store switch within a round
+    MAX_STAGED_STORES = 16
 
-    def __init__(self, bt: int = 2048, interpret: bool | None = None) -> None:
+    def __init__(self, bt: int = 2048, interpret: bool | None = None,
+                 max_staged: int | None = None) -> None:
         import jax
 
         self.bt = int(bt)
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
         self.interpret = bool(interpret)
+        self.max_staged = int(max_staged if max_staged is not None
+                              else self.MAX_STAGED_STORES)
         self._staged: OrderedDict[int, object] = OrderedDict()  # version->arr
 
-    def _triples(self, store: TripleStore):
+    def _triples(self, store, min_slots: int = 1):
+        """Device [T, 3] int32 copy of one *flat* store (a shard or a
+        monolithic :class:`TripleStore`), LRU-kept by store version.
+
+        ``min_slots`` widens the eviction limit to the number of flat
+        arrays the *current* store needs at once, so a sharded store with
+        more shards than ``max_staged`` never evicts its own shards
+        mid-round (which would re-upload the full store every scan).
+        """
         import jax.numpy as jnp
 
         arr = self._staged.get(store.version)
@@ -169,11 +218,35 @@ class JaxBackend(MatcherBackend):
                 raise ValueError("dictionary ids exceed int32 kernel range")
             arr = jnp.asarray(store.triples(), dtype=jnp.int32)
             self._staged[store.version] = arr
-            while len(self._staged) > self.MAX_STAGED_STORES:
+            limit = max(self.max_staged, min_slots)
+            while len(self._staged) > limit:
                 self._staged.popitem(last=False)
         else:
             self._staged.move_to_end(store.version)
         return arr
+
+    @staticmethod
+    def _store_slots(store: RDFStore) -> int:
+        """Flat device arrays ``store`` occupies when fully staged."""
+        shards = getattr(store, "shards", None)
+        if shards is None:
+            return 1
+        return max(1, sum(1 for sh in shards if sh.num_triples))
+
+    @staticmethod
+    def _scan_parts(store: RDFStore, tp: TriplePattern
+                    ) -> list[tuple[object, int]]:
+        """(flat store, global offset) pairs a scan for ``tp`` must touch."""
+        shards = getattr(store, "shards", None)
+        if shards is None:
+            return [(store, 0)]
+        if isinstance(tp.p, int):       # partition pruning: one owning shard
+            k = store.shard_of_pred(tp.p)
+            pair = (shards[k], int(store.shard_offsets[k]))
+            return [pair] if shards[k].num_triples else []
+        return [(sh, int(off))
+                for sh, off in zip(shards, store.shard_offsets)
+                if sh.num_triples]
 
     @staticmethod
     def _pattern_vec(tp: TriplePattern) -> np.ndarray:
@@ -183,7 +256,7 @@ class JaxBackend(MatcherBackend):
              tp.o if isinstance(tp.o, int) else -1], dtype=np.int32)
 
     @staticmethod
-    def _repeated_var_filter(store: TripleStore, tp: TriplePattern,
+    def _repeated_var_filter(store: RDFStore, tp: TriplePattern,
                              tids: np.ndarray) -> np.ndarray:
         if isinstance(tp.s, str) and isinstance(tp.o, str) and tp.s == tp.o:
             tids = tids[store.s[tids] == store.o[tids]]
@@ -193,17 +266,23 @@ class JaxBackend(MatcherBackend):
             tids = tids[store.o[tids] == store.p[tids]]
         return tids
 
-    def candidates(self, store: TripleStore, tp: TriplePattern) -> np.ndarray:
+    def candidates(self, store: RDFStore, tp: TriplePattern) -> np.ndarray:
         from ..kernels.triple_scan import triple_scan
         import jax.numpy as jnp
 
-        mask = triple_scan(self._triples(store),
-                           jnp.asarray(self._pattern_vec(tp)),
-                           bt=self.bt, interpret=self.interpret)
-        tids = np.flatnonzero(np.asarray(mask)).astype(np.int64)
+        pat = jnp.asarray(self._pattern_vec(tp))
+        slots = self._store_slots(store)
+        parts: list[np.ndarray] = []
+        for flat, off in self._scan_parts(store, tp):
+            mask = triple_scan(self._triples(flat, min_slots=slots), pat,
+                               bt=self.bt, interpret=self.interpret)
+            parts.append(np.flatnonzero(np.asarray(mask)).astype(np.int64)
+                         + off)
+        tids = (np.concatenate(parts) if parts
+                else np.zeros(0, dtype=np.int64))
         return self._repeated_var_filter(store, tp, tids)
 
-    def prescan(self, store: TripleStore,
+    def prescan(self, store: RDFStore,
                 tps: list[TriplePattern]) -> dict[tuple, np.ndarray]:
         from ..kernels.triple_scan import triple_scan_many
         import jax.numpy as jnp
@@ -213,13 +292,31 @@ class JaxBackend(MatcherBackend):
             uniq.setdefault(scan_key(tp), tp)
         if not uniq:
             return {}
-        pats = np.stack([self._pattern_vec(tp) for tp in uniq.values()])
-        masks = np.asarray(triple_scan_many(
-            self._triples(store), jnp.asarray(pats),
-            bt=self.bt, interpret=self.interpret))
+
+        # group deduplicated scans by the flat store (shard) they touch;
+        # a monolithic store is a single group
+        groups: dict[int, tuple[object, int, list[tuple]]] = {}
+        for k, tp in uniq.items():
+            for flat, off in self._scan_parts(store, tp):
+                g = groups.get(id(flat))
+                if g is None:
+                    g = groups[id(flat)] = (flat, off, [])
+                g[2].append(k)
+
+        slots = self._store_slots(store)
+        parts: dict[tuple, list[np.ndarray]] = {k: [] for k in uniq}
+        for flat, off, keys in groups.values():     # one launch per group
+            pats = np.stack([self._pattern_vec(uniq[k]) for k in keys])
+            masks = np.asarray(triple_scan_many(
+                self._triples(flat, min_slots=slots), jnp.asarray(pats),
+                bt=self.bt, interpret=self.interpret))
+            for i, k in enumerate(keys):
+                parts[k].append(
+                    np.flatnonzero(masks[i]).astype(np.int64) + off)
         out: dict[tuple, np.ndarray] = {}
-        for i, (k, tp) in enumerate(uniq.items()):
-            tids = np.flatnonzero(masks[i]).astype(np.int64)
+        for k, tp in uniq.items():
+            tids = (np.concatenate(parts[k]) if parts[k]
+                    else np.zeros(0, dtype=np.int64))
             out[k] = self._repeated_var_filter(store, tp, tids)
         return out
 
@@ -261,6 +358,9 @@ class EngineStats:
     cache_evictions: int = 0
     scans_requested: int = 0
     scans_executed: int = 0
+    scan_cache_hits: int = 0
+    scan_cache_misses: int = 0
+    scan_cache_evictions: int = 0
     exec_seconds: float = 0.0
 
     @property
@@ -279,22 +379,35 @@ class QueryEngine:
 
     def __init__(self, backend: str | MatcherBackend = "numpy",
                  cache_size: int = 256, max_rows: int = 5_000_000,
-                 cache_bytes: int = 512 * 1024 * 1024) -> None:
+                 cache_bytes: int = 512 * 1024 * 1024,
+                 scan_cache_bytes: int = 64 * 1024 * 1024,
+                 scan_cache_size: int = 4096) -> None:
         self.backend = (backend if isinstance(backend, MatcherBackend)
                         else get_backend(backend))
         self.cache_size = int(cache_size)
         # one result near max_rows can be hundreds of MB of int64 bindings,
         # so the LRU is bounded by bytes as well as entry count
         self.cache_bytes = int(cache_bytes)
+        # candidate-scan LRU keyed (store.version, scan key): hot scans
+        # survive between batches (scan_cache_bytes=0 disables). The count
+        # bound matters independently of the byte bound: empty candidate
+        # arrays are 0 bytes, so probe-miss workloads would otherwise grow
+        # the dict without limit as store versions churn.
+        self.scan_cache_bytes = int(scan_cache_bytes)
+        self.scan_cache_size = int(scan_cache_size)
         self.max_rows = int(max_rows)
         self.stats = EngineStats()
         self._cache: OrderedDict[tuple, MatchResult] = OrderedDict()
         self._cached_bytes = 0
+        self._scan_cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        self._scan_cached_bytes = 0
 
     # -- cache ---------------------------------------------------------------
     def clear_cache(self) -> None:
         self._cache.clear()
         self._cached_bytes = 0
+        self._scan_cache.clear()
+        self._scan_cached_bytes = 0
 
     def _cache_get(self, key: tuple) -> MatchResult | None:
         res = self._cache.get(key)
@@ -315,14 +428,43 @@ class QueryEngine:
         nbytes = self._result_bytes(res)
         if nbytes > self.cache_bytes:
             return                       # would evict everything; skip
+        displaced = self._cache.pop(key, None)
+        if displaced is not None:        # overwrite: release the old bytes
+            self._cached_bytes -= self._result_bytes(displaced)
         self._cache[key] = res
-        self._cache.move_to_end(key)
         self._cached_bytes += nbytes
         while (len(self._cache) > self.cache_size
                or self._cached_bytes > self.cache_bytes):
             _, old = self._cache.popitem(last=False)
             self._cached_bytes -= self._result_bytes(old)
             self.stats.cache_evictions += 1
+
+    # -- scan cache ----------------------------------------------------------
+    def _scan_cache_get(self, key: tuple) -> np.ndarray | None:
+        arr = self._scan_cache.get(key)
+        if arr is not None:
+            self._scan_cache.move_to_end(key)
+            self.stats.scan_cache_hits += 1
+        else:
+            self.stats.scan_cache_misses += 1
+        return arr
+
+    def _scan_cache_put(self, key: tuple, tids: np.ndarray) -> None:
+        if self.scan_cache_bytes <= 0:
+            return
+        nbytes = int(tids.nbytes)
+        if nbytes > self.scan_cache_bytes:
+            return
+        displaced = self._scan_cache.pop(key, None)
+        if displaced is not None:
+            self._scan_cached_bytes -= int(displaced.nbytes)
+        self._scan_cache[key] = tids
+        self._scan_cached_bytes += nbytes
+        while (len(self._scan_cache) > self.scan_cache_size
+               or self._scan_cached_bytes > self.scan_cache_bytes):
+            _, old = self._scan_cache.popitem(last=False)
+            self._scan_cached_bytes -= int(old.nbytes)
+            self.stats.scan_cache_evictions += 1
 
     @staticmethod
     def _remap(res: MatchResult, canon_to_actual: dict[str, str]
@@ -333,16 +475,17 @@ class QueryEngine:
             bindings=res.bindings, edge_ids=res.edge_ids)
 
     # -- execution -----------------------------------------------------------
-    def execute(self, store: TripleStore, q: QueryGraph) -> MatchResult:
+    def execute(self, store: RDFStore, q: QueryGraph) -> MatchResult:
         return self.execute_batch(store, [q])[0]
 
-    def execute_batch(self, store: TripleStore,
+    def execute_batch(self, store: RDFStore,
                       queries: list[QueryGraph]) -> list[MatchResult]:
         """Execute ``queries`` against ``store``; results align by index.
 
-        Identical candidate scans run once per batch; alpha-equivalent
-        queries resolve from the LRU cache (within the batch and across
-        calls, until the store version changes).
+        Identical candidate scans run once per batch and are retained in the
+        cross-batch scan LRU; alpha-equivalent queries resolve from the
+        result cache (within the batch and across calls, until the store
+        version changes).
         """
         t0 = time.perf_counter()
         self.stats.batches += 1
@@ -352,20 +495,39 @@ class QueryEngine:
         misses = [i for i, (ck, _) in enumerate(keyed)
                   if (store.version, ck) not in self._cache]
 
-        # scan memo for this batch: executed once per distinct scan key
+        # scan memo for this batch, seeded from the cross-batch scan LRU;
+        # the remaining distinct scan keys execute once via prescan
         memo: dict[tuple, np.ndarray] = {}
         if misses:
             need = [tp for i in misses for tp in queries[i].patterns]
             self.stats.scans_requested += len(need)
-            memo.update(self.backend.prescan(store, need))
-            self.stats.scans_executed += len(memo)
+            uniq: dict[tuple, TriplePattern] = {}
+            for tp in need:
+                uniq.setdefault(scan_key(tp), tp)
+            fresh: list[TriplePattern] = []
+            for k, tp in uniq.items():
+                hit = self._scan_cache_get((store.version, k))
+                if hit is not None:
+                    memo[k] = hit
+                else:
+                    fresh.append(tp)
+            if fresh:
+                scanned = self.backend.prescan(store, fresh)
+                self.stats.scans_executed += len(scanned)
+                memo.update(scanned)
+                for k, tids in scanned.items():
+                    self._scan_cache_put((store.version, k), tids)
 
-        def scan(st: TripleStore, tp: TriplePattern) -> np.ndarray:
+        def scan(st: RDFStore, tp: TriplePattern) -> np.ndarray:
             k = scan_key(tp)
             if k not in memo:          # cache-missed pattern added mid-join
                 self.stats.scans_requested += 1
-                self.stats.scans_executed += 1
-                memo[k] = self.backend.candidates(st, tp)
+                tids = self._scan_cache_get((st.version, k))
+                if tids is None:
+                    self.stats.scans_executed += 1
+                    tids = self.backend.candidates(st, tp)
+                    self._scan_cache_put((st.version, k), tids)
+                memo[k] = tids
             return memo[k]
 
         out: list[MatchResult | None] = [None] * len(queries)

@@ -1,4 +1,4 @@
-"""Vectorized BGP homomorphism matching over a :class:`TripleStore`.
+"""Vectorized BGP homomorphism matching over any :class:`RDFStore`.
 
 This is the query engine that runs on both the cloud and the edge servers
 (the paper uses Neptune / gStore; see DESIGN.md §3 for why we re-express
@@ -14,7 +14,12 @@ Algorithm: greedy selectivity-ordered left-deep join.
 
 The per-pattern *candidate scan* (predicate slice + constant masks) is exactly
 what the ``triple_scan`` Pallas kernel accelerates on TPU; the NumPy path here
-is the portable implementation with identical semantics.
+is the portable implementation with identical semantics. The matcher only
+touches the :class:`repro.rdf.graph.RDFStore` accessor surface (global triple
+ids), so it runs unchanged over the monolithic :class:`TripleStore` or the
+sharded :class:`repro.rdf.sharding.ShardedTripleStore` — on a sharded store,
+``pred_tids`` already prunes a bound-predicate scan to the one shard owning
+that predicate.
 
 Semantics: SPARQL BGP solutions = homomorphisms (paper Def. 3). Variables may
 map to the same vertex; a variable predicate matches any edge label. Each
@@ -28,7 +33,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..rdf.graph import TripleStore
+from ..rdf.graph import RDFStore
 from .query import QueryGraph, TriplePattern
 
 
@@ -69,7 +74,7 @@ class MatchResult:
         return int(proj.shape[0] * max(1, proj.shape[1]) * 8)
 
 
-def estimate_pattern_cardinality(store: TripleStore, tp: TriplePattern) -> float:
+def estimate_pattern_cardinality(store: RDFStore, tp: TriplePattern) -> float:
     """Selectivity-style cardinality estimate (Stocker et al., WWW'08)."""
     if isinstance(tp.p, int):
         n = float(store.pred_count[tp.p])
@@ -88,7 +93,7 @@ def estimate_pattern_cardinality(store: TripleStore, tp: TriplePattern) -> float
     return max(n, 0.0)
 
 
-def _candidates(store: TripleStore, tp: TriplePattern) -> np.ndarray:
+def _candidates(store: RDFStore, tp: TriplePattern) -> np.ndarray:
     """Triple ids satisfying the constant components of ``tp``."""
     if isinstance(tp.p, int):
         tids = store.pred_tids(tp.p)
@@ -108,7 +113,7 @@ def _candidates(store: TripleStore, tp: TriplePattern) -> np.ndarray:
     return tids
 
 
-def _order_patterns(store: TripleStore, q: QueryGraph) -> list[int]:
+def _order_patterns(store: RDFStore, q: QueryGraph) -> list[int]:
     """Greedy selectivity-ordered, connectivity-respecting pattern order."""
     n = len(q.patterns)
     est = [estimate_pattern_cardinality(store, tp) for tp in q.patterns]
@@ -128,7 +133,7 @@ def _order_patterns(store: TripleStore, q: QueryGraph) -> list[int]:
     return order
 
 
-def match_bgp(store: TripleStore, q: QueryGraph,
+def match_bgp(store: RDFStore, q: QueryGraph,
               max_rows: int = 5_000_000,
               candidates=None) -> MatchResult:
     """All homomorphic matches of ``q`` over ``store`` (paper Def. 3).
@@ -237,7 +242,7 @@ def match_bgp(store: TripleStore, q: QueryGraph,
 # Oracle: naive backtracking matcher (tests only)
 # ---------------------------------------------------------------------------
 
-def match_oracle(store: TripleStore, q: QueryGraph) -> tuple[set[tuple], list[str]]:
+def match_oracle(store: RDFStore, q: QueryGraph) -> tuple[set[tuple], list[str]]:
     """Exponential-time reference matcher (tests only).
 
     Returns ``(solutions, var_order)`` where each solution is a tuple of

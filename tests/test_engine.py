@@ -159,6 +159,72 @@ def test_scan_dedup_across_batch():
     assert eng.stats.scans_executed == 1
 
 
+def test_cache_put_overwrite_does_not_leak_bytes():
+    """Regression: overwriting a result-cache key must release the
+    displaced entry's bytes, not inflate _cached_bytes forever."""
+    rng = np.random.default_rng(21)
+    store = random_store(rng)
+    eng = QueryEngine()
+    res = eng.execute(store, QueryGraph([TriplePattern("?x", 0, "?y")], []))
+    want = eng._cached_bytes
+    assert want == eng._result_bytes(res) > 0
+    for _ in range(5):                       # repeated overwrites of one key
+        eng._cache_put(("k",), res)
+    assert eng._cached_bytes == want + eng._result_bytes(res)
+    assert eng.stats.cache_evictions == 0    # no spurious evictions
+
+
+def test_scan_cache_survives_between_batches():
+    """Scan LRU: with the result cache disabled, a repeated batch re-joins
+    but serves its candidate scans from the cross-round cache."""
+    rng = np.random.default_rng(25)
+    store = random_store(rng)
+    eng = QueryEngine(cache_size=0)          # force re-execution every batch
+    qs = [QueryGraph([TriplePattern("?x", p, "?y")], []) for p in range(3)]
+    eng.execute_batch(store, qs)
+    assert eng.stats.scans_executed == 3
+    assert eng.stats.scan_cache_hits == 0
+    eng.execute_batch(store, qs)             # scans resolve from the LRU
+    assert eng.stats.scans_executed == 3
+    assert eng.stats.scan_cache_hits == 3
+    # a different store version must not reuse the entries
+    sub = store.subgraph(np.arange(store.num_triples // 2))
+    eng.execute_batch(sub, qs)
+    assert eng.stats.scans_executed == 6
+    for q in qs:
+        assert sol_rows(eng.execute(sub, q)) == sol_rows(match_bgp(sub, q))
+
+
+def test_scan_cache_count_bound_with_empty_results():
+    """Zero-byte (empty-candidate) entries must still be bounded: the byte
+    cap alone would never evict them."""
+    rng = np.random.default_rng(29)
+    store = random_store(rng, n_ent=12)
+    eng = QueryEngine(cache_size=0, scan_cache_size=4)
+    # objects >= n_ent never match -> every scan result is empty (0 bytes)
+    qs = [QueryGraph([TriplePattern("?x", 0, 1000 + i)], [])
+          for i in range(12)]
+    eng.execute_batch(store, qs)
+    assert all(r.num_matches == 0 for r in eng.execute_batch(store, qs))
+    assert len(eng._scan_cache) <= 4
+    assert eng.stats.scan_cache_evictions >= 8
+
+
+def test_scan_cache_byte_bound_eviction():
+    rng = np.random.default_rng(27)
+    store = random_store(rng, n_trip=200)
+    one_scan = store.pred_tids(0).nbytes
+    eng = QueryEngine(cache_size=0, scan_cache_bytes=one_scan * 2)
+    qs = [QueryGraph([TriplePattern("?x", "?p", i)], []) for i in range(8)]
+    eng.execute_batch(store, qs)
+    assert eng.stats.scan_cache_evictions > 0
+    assert eng._scan_cached_bytes <= eng.scan_cache_bytes
+    assert sum(a.nbytes for a in eng._scan_cache.values()) == \
+        eng._scan_cached_bytes
+    eng.clear_cache()
+    assert eng._scan_cached_bytes == 0 and not eng._scan_cache
+
+
 def test_triple_scan_many_matches_single():
     rng = np.random.default_rng(13)
     tr = rng.integers(0, 30, (1000, 3)).astype(np.int32)
