@@ -20,6 +20,22 @@ Modes:
                           ~T/S — the sharded scan should win on
                           bound-predicate workloads (the common case).
 
+``--join`` adds the join-pipeline axis (PR 3):
+
+- ``join_shard_s{S}`` /   cold engine batches on the sharded store with the
+  ``join_global_s{S}``    shard-local presorted join pipeline vs the global
+                          scan+argsort baseline (``shard_local_joins=False``)
+                          — per-phase timings (prescan/join seconds) and
+                          ``JoinStats`` counters land in ``derived``.
+- ``round_seq_s{S}``      one multi-edge ``EdgeCloudSystem`` scheduling round
+  ``round_thread_s{S}``   executed sequentially, with per-server batches
+  ``round_process_s{S}``  through a thread pool (``overlap=True`` — wins
+                          where the hot paths release the GIL), and through
+                          the persistent fork pool (``overlap="process"`` —
+                          true parallelism for the GIL-bound numpy path);
+                          the number reported is the execute phase's wall
+                          clock, best of interleaved repeats.
+
 The workload repeats a pool of template queries (users re-issue hot
 queries), so scan dedup and the result cache both engage — the acceptance
 targets are ``engine_numpy_batch`` beating ``engine_loop`` on a >=64-query
@@ -53,6 +69,8 @@ def bench(fn, n_calls: int, repeats: int = 3) -> float:
     return best / n_calls
 
 
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=15.0,
@@ -70,6 +88,11 @@ def main() -> None:
                          "('' disables)")
     ap.add_argument("--skip-jax", action="store_true",
                     help="skip the interpret-mode JAX backend (slow off-TPU)")
+    ap.add_argument("--join", action="store_true",
+                    help="join-pipeline axis: shard-local vs global joins "
+                         "+ overlapped vs sequential multi-edge rounds")
+    ap.add_argument("--round-edges", type=int, default=4,
+                    help="edge servers in the --join overlap round")
     args = ap.parse_args()
     if args.batch < 1 or args.unique < 1 or args.scale <= 0:
         ap.error("--batch/--unique must be >= 1 and --scale > 0")
@@ -136,6 +159,80 @@ def main() -> None:
     for suffix, store in stores[1:]:
         bench_backend("numpy", suffix, store, args.repeats)
 
+    # ---- join-pipeline axis (--join): shard-local vs global joins ---------
+    # Runs BEFORE the jax section: interpret-mode Pallas leaves XLA worker
+    # threads and staged device buffers behind that perturb the wall-clock
+    # A/B below. Reps are interleaved shard/global for the same reason.
+    t_join: dict[str, float] = {}
+    t_round: dict[str, float] = {}
+    if args.join and shard_counts:
+        S = max(shard_counts)
+        store_s = dict(stores)[f"_s{S}"]
+        join_engines = {mode: QueryEngine(backend="numpy",
+                                          shard_local_joins=flag)
+                        for mode, flag in (("shard", True),
+                                           ("global", False))}
+        t_join = {mode: float("inf") for mode in join_engines}
+        join_reps = max(3, args.repeats)
+        for _ in range(join_reps):                   # interleaved best-of
+            for mode, eng in join_engines.items():
+                eng.clear_cache()
+                t0 = time.perf_counter()
+                eng.execute_batch(store_s, queries)
+                t_join[mode] = min(t_join[mode],
+                                   (time.perf_counter() - t0)
+                                   / len(queries))
+        for mode, eng in join_engines.items():
+            # stats accumulate over all repeats (clear_cache keeps them);
+            # report per-repeat values (exact for counters, mean for the
+            # phase seconds) so they pair with the per-repeat best-of time
+            js = eng.stats.join
+            rows.append((
+                f"join_{mode}_s{S}", t_join[mode] * 1e6,
+                f"backend=numpy|shard_local={eng.shard_local_joins}"
+                f"|pred_index_joins={js.joins_pred_index // join_reps}"
+                f"|vertex_joins={js.joins_vertex // join_reps}"
+                f"|pred_var_joins={js.joins_pred_var // join_reps}"
+                f"|merged_joins={js.merged_joins // join_reps}"
+                f"|prescan_s={eng.stats.prescan_seconds / join_reps:.4f}"
+                f"|join_s={eng.stats.join_seconds / join_reps:.4f}"))
+        rows[-2] = (rows[-2][0], rows[-2][1], rows[-2][2] +
+                    f"|speedup_vs_global="
+                    f"{t_join['global'] / t_join['shard']:.2f}x")
+
+        # ---- overlapped vs sequential multi-edge round --------------------
+        from repro.core.cost import SystemParams
+        from repro.edge.system import EdgeCloudSystem
+        K = max(2, args.round_edges)
+        params = SystemParams.synthetic(n_users=max(8, 2 * K), n_edges=K,
+                                        seed=5)
+        sys_ = EdgeCloudSystem(store_s, g.dictionary, params,
+                               storage_budgets=10**9, backend="numpy")
+        sys_.prepare([texts for _ in range(params.N)])
+        round_queries = [(i % params.N, q) for i, q in enumerate(queries)]
+        servers = len(sys_.run_round_batched(            # warm indexes
+            round_queries, policy="greedy",
+            observe=False).assignment_counts)
+
+        modes = (("seq", False), ("thread", True), ("process", "process"))
+        t_round = {name: float("inf") for name, _ in modes}
+        mode_seen = {name: "seq" for name, _ in modes}
+        for _ in range(max(3, args.repeats)):            # interleaved
+            for name, ov in modes:
+                sys_.clear_engine_caches()
+                rep = sys_.run_round_batched(round_queries, policy="greedy",
+                                             observe=False, overlap=ov)
+                t_round[name] = min(t_round[name], rep.execute_wall_seconds)
+                mode_seen[name] = rep.overlap_mode or "seq"
+        sys_.close_overlap_pool()
+        for name, _ in modes:
+            extra = ("" if name == "seq" else
+                     f"|speedup_vs_seq={t_round['seq'] / t_round[name]:.2f}x")
+            rows.append((f"round_{name}_s{S}", t_round[name] * 1e6,
+                         f"backend=numpy|edges={K}|servers={servers}"
+                         f"|batch={len(round_queries)}"
+                         f"|mode={mode_seen[name]}{extra}"))
+
     if not args.skip_jax:
         import jax
         mode = ("compiled" if jax.default_backend() == "tpu"
@@ -164,6 +261,8 @@ def main() -> None:
                 "shards": shard_counts,
                 "repeats": args.repeats,
                 "jax": not args.skip_jax,
+                "join_axis": bool(args.join),
+                "round_edges": args.round_edges if args.join else None,
             },
             "rows": [{"name": n, "us_per_call": round(us, 3),
                       "qps": round(1e6 / us, 1), "derived": d}
@@ -181,6 +280,15 @@ def main() -> None:
         assert best_s < mono, (
             f"sharded bound-predicate scan ({best_s * 1e6:.0f}us) should "
             f"beat the monolithic scan ({mono * 1e6:.0f}us)")
+    if args.join and shard_counts and g.store.num_triples >= 100_000:
+        assert t_join["shard"] < t_join["global"], (
+            f"shard-local join ({t_join['shard'] * 1e6:.0f}us/q) should "
+            f"beat the global join ({t_join['global'] * 1e6:.0f}us/q)")
+        # thread overlap is advisory (GIL-releasing fraction is platform-
+        # dependent); the fork pool must genuinely overlap
+        assert t_round["process"] < t_round["seq"], (
+            f"process-overlapped round ({t_round['process']:.3f}s) should "
+            f"beat the sequential round ({t_round['seq']:.3f}s)")
 
 
 if __name__ == "__main__":

@@ -131,6 +131,17 @@ def assignment_cost(D: np.ndarray, tasks: QueryTasks,
 CYCLES_PER_ROW = 220.0       # calibration constant: join work per binding row
 CYCLES_BASE = 5e4            # fixed per-query overhead (parse, plan)
 BITS_PER_CELL = 64.0
+BITS_PER_BYTE = 8
+
+
+def result_bits(res, projection: list[str]) -> float:
+    """w_n in *bits* from a :class:`~repro.sparql.matcher.MatchResult`.
+
+    The single source of the bytes->bits unit conversion for result-size
+    accounting — every ``ExecutionRecord.result_bits`` and measured ``w_n``
+    goes through here (Eq. 5 divides w_n by link rates in bits/s).
+    """
+    return float(res.result_bytes(projection) * BITS_PER_BYTE)
 
 
 def estimate_query_cost(store: RDFStore, q: QueryGraph,
@@ -188,7 +199,9 @@ def measured_query_cost(store: RDFStore, q: QueryGraph,
         res = match_bgp(store, q)
     n_rows = res.num_matches
     c = CYCLES_BASE + CYCLES_PER_ROW * max(n_rows, 1)
-    w = float(res.result_bytes(q.projection) * 8)
+    # unit check: 64-bit binding cells == 8 bytes/cell; w_n must be bits
+    assert BITS_PER_CELL == BITS_PER_BYTE * np.dtype(np.int64).itemsize
+    w = result_bits(res, q.projection)
     return float(c), w, n_rows
 
 
@@ -205,6 +218,6 @@ def measured_query_cost_batch(store: RDFStore, queries: list[QueryGraph],
     results = engine.execute_batch(store, queries)
     n = np.array([r.num_matches for r in results], dtype=np.int64)
     c = CYCLES_BASE + CYCLES_PER_ROW * np.maximum(n, 1).astype(np.float64)
-    w = np.array([float(r.result_bytes(q.projection) * 8)
+    w = np.array([result_bits(r, q.projection)
                   for q, r in zip(queries, results)], dtype=np.float64)
     return c, w, n

@@ -17,6 +17,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..core.cost import result_bits
 from ..core.induced import induced_edge_ids
 from ..core.pattern import Pattern, PatternIndex, pattern_of
 from ..core.placement import DynamicPlacement
@@ -32,6 +33,14 @@ class ExecutionRecord:
     wall_seconds: float
     result_bits: float
 
+    @classmethod
+    def of(cls, res: MatchResult, projection: list[str],
+           wall_seconds: float) -> "ExecutionRecord":
+        """Build from a match result; ``result_bits`` goes through the
+        single-sourced :func:`repro.core.cost.result_bits` conversion."""
+        return cls(n_matches=res.num_matches, wall_seconds=wall_seconds,
+                   result_bits=result_bits(res, projection))
+
 
 def _execute_batch(store: RDFStore, engine: QueryEngine,
                    queries: list[QueryGraph],
@@ -42,8 +51,7 @@ def _execute_batch(store: RDFStore, engine: QueryEngine,
     t0 = time.perf_counter()
     results = engine.execute_batch(store, queries)
     per_q = (time.perf_counter() - t0) / max(1, len(queries))
-    return [(res, ExecutionRecord(res.num_matches, per_q,
-                                  res.result_bytes(q.projection) * 8))
+    return [(res, ExecutionRecord.of(res, q.projection, per_q))
             for q, res in zip(queries, results)]
 
 
@@ -60,8 +68,7 @@ class CloudServer:
         t0 = time.perf_counter()
         res = self.engine.execute(self.store, q)
         dt = time.perf_counter() - t0
-        return res, ExecutionRecord(res.num_matches, dt,
-                                    res.result_bytes(q.projection) * 8)
+        return res, ExecutionRecord.of(res, q.projection, dt)
 
     def execute_batch(self, queries: list[QueryGraph],
                       ) -> list[tuple[MatchResult, ExecutionRecord]]:
@@ -144,8 +151,7 @@ class EdgeServer:
         t0 = time.perf_counter()
         res = self.engine.execute(self.store, q)
         dt = time.perf_counter() - t0
-        return res, ExecutionRecord(res.num_matches, dt,
-                                    res.result_bytes(q.projection) * 8)
+        return res, ExecutionRecord.of(res, q.projection, dt)
 
     def execute_batch(self, queries: list[QueryGraph],
                       ) -> list[tuple[MatchResult, ExecutionRecord]]:

@@ -11,6 +11,22 @@ the full paper pipeline:
 Response time per query follows the paper's cost model (Eq. 5) with the
 CRA-optimal resource split; wall-clock matcher times are also recorded so
 benchmarks can report both modeled and measured numbers.
+
+``run_round_batched`` executes each server's assignment as one engine batch;
+with ``overlap=True`` (or ``"thread"``) the per-server batches run through a
+thread pool so edge and cloud execution no longer serialize (the shared
+engine's caches are lock-guarded; per-server wall clocks are measured inside
+each thread and feed the Eq. 5 accounting unchanged). ``overlap="process"``
+instead dispatches batches to a persistent fork-based worker pool — true
+parallelism for GIL-bound NumPy deployments: workers inherit the stores
+copy-on-write and return only the tiny :class:`ExecutionRecord`s (match
+results are not shipped back; the round loop never reads them). The pool is
+rebuilt automatically when any store version changes (prepare/rebalance);
+worker engines keep their own version-keyed caches — use
+``clear_engine_caches`` to cold-start both sides. Process mode requires a
+jax-free process: forking live XLA runtime threads is unsafe, so jax
+engines — or any process where an XLA backend was already initialized —
+fall back to thread overlap.
 """
 
 from __future__ import annotations
@@ -31,6 +47,65 @@ from ..sparql.query import QueryGraph, parse_sparql
 from .server import CloudServer, EdgeServer
 
 
+# Fork-inheritance slots for process-mode overlapped rounds: the parent sets
+# these just before forking the pool, so workers see the full system
+# (stores, servers, engine) copy-on-write without any pickling. They stay
+# set while the pool is alive (Pool forks REPLACEMENT workers when one
+# dies), which also enforces one live process pool per process: creating a
+# pool for another system closes the previous owner's pool first.
+# _WORKER_SYSTEM is a weakref on the parent side so an abandoned system can
+# still be collected (its __del__ closes the pool); inside a worker the
+# referent was alive at fork time, so the copy-on-write snapshot resolves.
+_WORKER_SYSTEM = None       # weakref.ref to the pool-owning system, or None
+_WORKER_EPOCH = 0
+
+
+def _xla_initialized() -> bool:
+    """True once any XLA backend is live in this process — forking then is
+    unsafe (XLA's runtime threads can leave locks held in the child).
+
+    Fails CLOSED: if jax is imported but the introspection point moved
+    (private API — ``jax._src.xla_bridge._backends`` in jax 0.4.x), a live
+    runtime can't be ruled out and process-mode overlap is disabled rather
+    than risking a fork deadlock.
+    """
+    import sys
+    if "jax" not in sys.modules:
+        return False
+    xb = sys.modules.get("jax._src.xla_bridge")
+    if xb is not None and hasattr(xb, "_backends"):
+        return bool(xb._backends)
+    return True
+
+
+def _round_worker(task):
+    """Pool worker: execute one server's batch, return (k, records, wall).
+
+    ``epoch`` mirrors the parent's ``clear_engine_caches`` counter: when it
+    advances, the worker cold-starts its own engine caches first — so a
+    benchmark clearing caches between rounds measures both sides cold.
+    """
+    global _WORKER_EPOCH
+    k, qs, epoch = task
+    # the weakref trade-off: a strong ref here (or in Pool initargs) would
+    # be pinned by the pool's maintenance thread and make an abandoned
+    # system uncollectable (the leak __del__ exists to prevent). The cost:
+    # a REPLACEMENT worker forked after the owner died cannot resolve it —
+    # fail with an actionable message (the parent's map() re-raises).
+    sys_ = _WORKER_SYSTEM() if _WORKER_SYSTEM is not None else None
+    if sys_ is None:
+        raise RuntimeError(
+            "process-overlap worker has no live system (pool owner was "
+            "garbage-collected); call close_overlap_pool() and retry")
+    if epoch != _WORKER_EPOCH:
+        sys_.engine.clear_cache()
+        _WORKER_EPOCH = epoch
+    server = sys_.cloud if k < 0 else sys_.edges[k]
+    t0 = time.perf_counter()
+    out = server.execute_batch(qs)
+    return k, [rec for _, rec in out], time.perf_counter() - t0
+
+
 @dataclass
 class QueryOutcome:
     user: int
@@ -49,6 +124,12 @@ class RoundReport:
     objective: float              # scheduler objective (modeled total cost)
     schedule_seconds: float
     assignment_counts: dict[int, int]  # -1 cloud, k per edge
+    overlapped: bool = False      # batches dispatched through a worker pool
+    overlap_mode: str = ""        # "", "thread", or "process"
+    execute_wall_seconds: float = 0.0  # wall clock of the execute phase
+    # per-server batch wall clock (-1 cloud, k per edge); in an overlapped
+    # round these overlap each other, so their sum exceeds the phase wall
+    server_wall_seconds: dict[int, float] = field(default_factory=dict)
 
     @property
     def total_modeled_latency(self) -> float:
@@ -89,6 +170,64 @@ class EdgeCloudSystem:
                       for k in range(params.K)]
         self._size_cache: dict[tuple, tuple] = {}
         self.construction_seconds = 0.0
+        self._proc_pool = None
+        self._proc_pool_versions: tuple | None = None
+        self._engine_epoch = 0
+
+    # -- process-mode overlap pool -------------------------------------------
+    def _store_versions(self) -> tuple:
+        return (self.cloud.store.version,
+                *(es.store.version if es.store is not None else None
+                  for es in self.edges))
+
+    def _ensure_process_pool(self):
+        """Persistent fork pool for overlapped rounds; rebuilt whenever any
+        store version changes (workers hold the stores copy-on-write)."""
+        versions = self._store_versions()
+        if (self._proc_pool is not None
+                and self._proc_pool_versions == versions):
+            return self._proc_pool
+        global _WORKER_SYSTEM, _WORKER_EPOCH
+        import weakref
+        prev = _WORKER_SYSTEM() if _WORKER_SYSTEM is not None else None
+        if prev is not None and prev is not self:
+            # one live pool per process: replacement workers forked later
+            # inherit the CURRENT globals, so another system's stale pool
+            # must not outlive its ownership of them
+            prev.close_overlap_pool()
+        self.close_overlap_pool()
+        import multiprocessing as mp
+        import os
+        ctx = mp.get_context("fork")
+        workers = max(2, min(self.params.K + 1, os.cpu_count() or 2))
+        # workers inherit the current epoch so fork-warmed engine caches
+        # survive until the next clear_engine_caches
+        _WORKER_SYSTEM = weakref.ref(self)
+        _WORKER_EPOCH = self._engine_epoch
+        self._proc_pool = ctx.Pool(workers)
+        self._proc_pool_versions = versions
+        return self._proc_pool
+
+    def close_overlap_pool(self) -> None:
+        global _WORKER_SYSTEM
+        if self._proc_pool is not None:
+            self._proc_pool.terminate()
+            self._proc_pool = None
+            self._proc_pool_versions = None
+        if _WORKER_SYSTEM is not None and _WORKER_SYSTEM() is self:
+            _WORKER_SYSTEM = None
+
+    def __del__(self):  # pragma: no cover - GC timing dependent
+        try:
+            self.close_overlap_pool()
+        except Exception:
+            pass
+
+    def clear_engine_caches(self) -> None:
+        """Cold-start the shared engine AND any process-overlap workers
+        (each worker clears its own engine before its next task)."""
+        self.engine.clear_cache()
+        self._engine_epoch += 1
 
     # -- offline preparation (paper: construction overhead, Table 11) -------
     def prepare(self, history_queries: list[list[str]]) -> None:
@@ -232,7 +371,10 @@ class EdgeCloudSystem:
 
     def run_round_batched(self, queries: list[tuple[int, QueryGraph]],
                           policy: str = "bnb", execute: bool = True,
-                          observe: bool = True, **sched_kw) -> RoundReport:
+                          observe: bool = True,
+                          overlap: bool | str = False,
+                          max_workers: int | None = None,
+                          **sched_kw) -> RoundReport:
         """One scheduling round where each server executes its assignment as
         ONE batch through the shared :class:`QueryEngine` (scan dedup +
         result cache) instead of a per-query Python loop.
@@ -242,6 +384,20 @@ class EdgeCloudSystem:
         produce the same solution multisets per query (asserted in
         ``tests/test_engine.py``). Per-query ``measured_exec_seconds`` is the
         batch wall time apportioned evenly over the batch.
+
+        ``overlap=True`` (or ``"thread"``) dispatches each server's batch
+        through a thread pool so edge and cloud batches no longer serialize
+        — the engine's caches are lock-guarded and the NumPy/JAX hot paths
+        release the GIL where they can. ``overlap="process"`` uses the
+        persistent fork pool instead (see the module docstring): full
+        parallelism for GIL-bound numpy deployments; requires the numpy
+        backend (jax engines fall back to threads). In every mode each
+        server's wall clock is measured inside its own worker
+        (``RoundReport.server_wall_seconds``) and feeds the Eq. 5 accounting
+        exactly as in a sequential round, so overlapped and sequential
+        rounds report identical outcomes (asserted in
+        ``tests/test_join_pipeline.py``); only the round's
+        ``execute_wall_seconds`` shrinks.
         """
         tasks, params_batch, sr, sched_dt = self._schedule_round(
             queries, policy, sched_kw)
@@ -255,15 +411,55 @@ class EdgeCloudSystem:
             assigned.append(k)
             counts[k] = counts.get(k, 0) + 1
 
+        mode = ("" if not overlap
+                else overlap if isinstance(overlap, str) else "thread")
+        if mode == "process":
+            import multiprocessing as mp
+            if (self.engine.backend.name == "jax" or _xla_initialized()
+                    or "fork" not in mp.get_all_start_methods()):
+                # forking with live XLA runtime threads (this engine's or
+                # ANY prior jax use in this process) risks a child
+                # deadlock; spawn-only platforms have no fork at all
+                mode = "thread"
+
         records: list = [None] * len(queries)
+        server_wall: dict[int, float] = {}
+        exec_wall = 0.0
         if execute:
             by_server: dict[int, list[int]] = {}
             for i, k in enumerate(assigned):
                 by_server.setdefault(k, []).append(i)
-            for k, idxs in by_server.items():
+
+            def run_server(k: int, idxs: list[int]):
                 batch = [queries[i][1] for i in idxs]
                 server = self.cloud if k < 0 else self.edges[k]
-                for i, (res, rec) in zip(idxs, server.execute_batch(batch)):
+                t0 = time.perf_counter()
+                out = server.execute_batch(batch)
+                return k, [rec for _, rec in out], time.perf_counter() - t0
+
+            if len(by_server) <= 1:
+                mode = ""            # nothing to overlap: report truthfully
+            # pool (re)construction is deployment cost, not round latency —
+            # keep it outside the timed execute phase
+            pool = (self._ensure_process_pool()
+                    if mode == "process" else None)
+            t_exec = time.perf_counter()
+            if pool is not None:
+                payload = [(k, [queries[i][1] for i in idxs],
+                            self._engine_epoch)
+                           for k, idxs in by_server.items()]
+                done = pool.map(_round_worker, payload)
+            elif mode:
+                from ..core.parallel import thread_map
+                done = thread_map(lambda kv: run_server(*kv),
+                                  by_server.items(), max_workers)
+            else:
+                done = [run_server(k, idxs)
+                        for k, idxs in by_server.items()]
+            exec_wall = time.perf_counter() - t_exec
+            for k, recs, dt in done:
+                server_wall[k] = dt
+                for i, rec in zip(by_server[k], recs):
                     records[i] = rec
 
         outcomes: list[QueryOutcome] = []
@@ -291,7 +487,11 @@ class EdgeCloudSystem:
         return RoundReport(policy=policy, outcomes=outcomes,
                            objective=sr.objective,
                            schedule_seconds=sched_dt,
-                           assignment_counts=counts)
+                           assignment_counts=counts,
+                           overlapped=bool(mode and execute),
+                           overlap_mode=mode if execute else "",
+                           execute_wall_seconds=exec_wall,
+                           server_wall_seconds=server_wall)
 
     def rebalance_all(self) -> dict[int, tuple[int, int]]:
         """Dynamic placement update across edge servers (async in paper)."""

@@ -23,9 +23,15 @@ the accessor surface every consumer in this repo already programs against:
   confuse a sharded store with any other store (or shard).
 
 The shard-aware *scan* fast paths live in :mod:`repro.sparql.engine`: the
-NumPy backend scans shards independently and concatenates global ids; the JAX
-backend stages per-shard device arrays and fuses each shard's deduplicated
-batch scans into one ``triple_scan_many`` launch per *touched* shard.
+NumPy backend scans shards independently and keeps the per-shard partitions
+(``parts()``) separate as :class:`repro.sparql.matcher.CandidateParts`; the
+JAX backend stages per-shard device arrays and fuses each shard's
+deduplicated batch scans into one ``triple_scan_many`` launch per *touched*
+shard. Downstream, the matcher's join pipeline exploits the same layout:
+bound-predicate equi-joins probe the owning shard's ``pred_index`` sorted
+views shard-locally (the partition-disjointness condition holds trivially —
+one predicate lives in exactly one shard), and partial binding tables merge
+only at variable-predicate / cross-shard joins.
 """
 
 from __future__ import annotations
@@ -100,6 +106,14 @@ class ShardedTripleStore:
     # -- sharding-specific accessors -----------------------------------------
     def shard_of_pred(self, pid: int) -> int:
         return int(shard_of_pred(pid, self.num_shards))
+
+    def parts(self) -> list[tuple[TripleStore, int]]:
+        """Non-empty ``(shard, global_id_offset)`` pairs — the candidate
+        partitions a wildcard-predicate scan (and the shard-local join
+        pipeline downstream of it) fans out over."""
+        return [(sh, int(off))
+                for sh, off in zip(self.shards, self.shard_offsets)
+                if sh.num_triples]
 
     # -- RDFStore protocol ---------------------------------------------------
     @property

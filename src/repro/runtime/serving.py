@@ -52,8 +52,16 @@ class OffloadServingPool:
         self.cloud_link_bps = cloud_link_bps
 
     def admit(self, requests: list[dict], policy: str = "bnb",
-              execute: bool = True, **sched_kw) -> ServedBatch:
-        """requests: dicts with {class_id, cycles, result_bits, payload}."""
+              execute: bool = True, overlap: bool = False,
+              max_workers: int | None = None, **sched_kw) -> ServedBatch:
+        """requests: dicts with {class_id, cycles, result_bits, payload}.
+
+        ``overlap=True`` runs the per-replica (and cloud-pool) batches
+        through a thread pool instead of serializing them — the serving
+        analogue of ``EdgeCloudSystem.run_round_batched(overlap=True)``.
+        Runners must be thread-safe (``make_sparql_runner`` engines are:
+        their caches are lock-guarded).
+        """
         N, K = len(requests), len(self.replicas)
         c = np.array([r["cycles"] for r in requests], dtype=np.float64)
         w = np.array([r["result_bits"] for r in requests], dtype=np.float64)
@@ -81,13 +89,24 @@ class OffloadServingPool:
 
         responses: list = [None] * N
         if execute:
+            groups = []
             for j in list(range(K)) + [-1]:
                 idx = np.flatnonzero(assign == j)
-                if len(idx) == 0:
-                    continue
+                if len(idx):
+                    groups.append((j, idx))
+
+            def run_group(j: int, idx: np.ndarray):
                 runner = (self.cloud_runner if j < 0
                           else (self.replicas[j].runner or self.cloud_runner))
-                outs = runner([requests[i]["payload"] for i in idx])
+                return idx, runner([requests[i]["payload"] for i in idx])
+
+            if overlap:
+                from ..core.parallel import thread_map
+                done = thread_map(lambda g: run_group(*g), groups,
+                                  max_workers)
+            else:
+                done = [run_group(j, idx) for j, idx in groups]
+            for idx, outs in done:
                 for i, o in zip(idx, outs):
                     responses[i] = o
         return ServedBatch(assignments=assign, objective=sr.objective,

@@ -46,22 +46,53 @@ store, so stale entries can never be served (they age out of the LRU).
 Cached arrays are shared between hits — treat :class:`MatchResult` buffers
 as read-only.
 
+**4. Shard-parallel join pipeline.** Candidate scans are returned as
+:class:`repro.sparql.matcher.CandidateParts` — per-shard partitions instead
+of one concatenated global id array — and each query executes under a
+:func:`repro.sparql.matcher.plan_bgp` plan: bound-predicate equi-joins run
+shard-locally (probing the owning shard's presorted ``PredIndex``, no scan
+and no per-join sort), and partial binding tables are merged only at
+variable-predicate / cross-shard joins. ``shard_local_joins=False`` falls
+back to the global scan+sort join (the ``--join`` baseline in
+``benchmarks/bench_engine.py``). Per-phase stats land in
+:class:`EngineStats`: ``prescan_seconds`` / ``join_seconds`` and the
+``join`` :class:`~repro.sparql.matcher.JoinStats` counters.
+
+**Cache key contracts.**
+
+- *scan key* (:func:`scan_key`): constants + repeated-variable structure
+  only — it deliberately ignores variable *spelling*, so ``(?x p ?y)`` and
+  ``(?u p ?v)`` share one candidate scan.
+- *query key* (:func:`query_key`): the BGP canonicalized by first-occurrence
+  variable renaming; the projection is deliberately **excluded** — a cached
+  :class:`MatchResult` binds all variables, and projection is applied by the
+  caller, so queries differing only in ``SELECT`` lists share an entry.
+
+**Thread safety.** One engine may serve overlapped server batches
+(``EdgeCloudSystem.run_round_batched(overlap=True)``) from multiple
+threads: the result/scan caches and stats are guarded by an internal lock,
+while the NumPy/JAX hot paths run outside it (they release the GIL on
+large arrays, which is what makes overlapped rounds pay off).
+
 Semantics: identical to per-query :func:`repro.sparql.matcher.match_bgp` —
 solution multisets are equal on every backend and store kind, asserted
-against the oracle in ``tests/test_engine.py`` / ``tests/test_sharding.py``.
+against the oracle in ``tests/test_engine.py`` / ``tests/test_sharding.py``
+/ ``tests/test_join_pipeline.py``.
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
 
 from ..rdf.graph import RDFStore
-from .matcher import MatchResult, _candidates, match_bgp
+from .matcher import (CandidateParts, JoinStats, MatchResult, _candidates,
+                      match_bgp, plan_bgp)
 from .query import QueryGraph, TriplePattern
 
 # ---------------------------------------------------------------------------
@@ -125,15 +156,31 @@ class MatcherBackend:
     def candidates(self, store: RDFStore, tp: TriplePattern) -> np.ndarray:
         raise NotImplementedError
 
-    def prescan(self, store: RDFStore,
-                tps: list[TriplePattern]) -> dict[tuple, np.ndarray]:
-        """Scan many deduplicated patterns up front; default: one by one."""
-        out: dict[tuple, np.ndarray] = {}
+    def candidate_parts(self, store: RDFStore,
+                        tp: TriplePattern) -> CandidateParts:
+        """Partitioned scan: per-shard global-id arrays (default: one part).
+
+        Shard-aware backends override this so the matcher can join each
+        partition shard-locally and merge partial binding tables only at
+        variable-predicate / cross-shard joins.
+        """
+        return CandidateParts([self.candidates(store, tp)])
+
+    def prescan_parts(self, store: RDFStore, tps: list[TriplePattern],
+                      ) -> dict[tuple, CandidateParts]:
+        """Partitioned scan of many deduplicated patterns up front."""
+        out: dict[tuple, CandidateParts] = {}
         for tp in tps:
             k = scan_key(tp)
             if k not in out:
-                out[k] = self.candidates(store, tp)
+                out[k] = self.candidate_parts(store, tp)
         return out
+
+    def prescan(self, store: RDFStore,
+                tps: list[TriplePattern]) -> dict[tuple, np.ndarray]:
+        """Scan many deduplicated patterns up front (concatenated ids)."""
+        return {k: parts.concat()
+                for k, parts in self.prescan_parts(store, tps).items()}
 
 
 class NumpyBackend(MatcherBackend):
@@ -146,22 +193,25 @@ class NumpyBackend(MatcherBackend):
 
     name = "numpy"
 
-    def candidates(self, store: RDFStore, tp: TriplePattern) -> np.ndarray:
+    def candidate_parts(self, store: RDFStore,
+                        tp: TriplePattern) -> CandidateParts:
         shards = getattr(store, "shards", None)
         if shards is None:
-            return _candidates(store, tp)
+            return CandidateParts([_candidates(store, tp)])
         # A sharded store's global accessors would give the same answer, but
         # scanning shard-locally is the access shape a distributed deployment
         # needs (shards on separate hosts have no global arrays) — keep the
-        # fan-out explicit and lift local ids by the shard offset.
+        # fan-out explicit and lift local ids by the shard offset. The parts
+        # stay separate so the join can run shard-locally as well.
         if isinstance(tp.p, int):       # partition pruning: one owning shard
             k = store.shard_of_pred(tp.p)
-            return _candidates(shards[k], tp) + store.shard_offsets[k]
-        parts = [_candidates(sh, tp) + off
-                 for sh, off in zip(shards, store.shard_offsets)
-                 if sh.num_triples]
-        return (np.concatenate(parts) if parts
-                else np.zeros(0, dtype=np.int64))
+            return CandidateParts(
+                [_candidates(shards[k], tp) + store.shard_offsets[k]])
+        return CandidateParts([_candidates(sh, tp) + off
+                               for sh, off in store.parts()])
+
+    def candidates(self, store: RDFStore, tp: TriplePattern) -> np.ndarray:
+        return self.candidate_parts(store, tp).concat()
 
 
 class JaxBackend(MatcherBackend):
@@ -200,6 +250,8 @@ class JaxBackend(MatcherBackend):
         self.max_staged = int(max_staged if max_staged is not None
                               else self.MAX_STAGED_STORES)
         self._staged: OrderedDict[int, object] = OrderedDict()  # version->arr
+        # staging LRU is shared across overlapped server batches
+        self._stage_lock = threading.Lock()
 
     def _triples(self, store, min_slots: int = 1):
         """Device [T, 3] int32 copy of one *flat* store (a shard or a
@@ -212,17 +264,19 @@ class JaxBackend(MatcherBackend):
         """
         import jax.numpy as jnp
 
-        arr = self._staged.get(store.version)
-        if arr is None:
-            if max(store.num_entities, store.num_predicates) >= 2 ** 31:
-                raise ValueError("dictionary ids exceed int32 kernel range")
-            arr = jnp.asarray(store.triples(), dtype=jnp.int32)
+        with self._stage_lock:
+            arr = self._staged.get(store.version)
+            if arr is not None:
+                self._staged.move_to_end(store.version)
+                return arr
+        if max(store.num_entities, store.num_predicates) >= 2 ** 31:
+            raise ValueError("dictionary ids exceed int32 kernel range")
+        arr = jnp.asarray(store.triples(), dtype=jnp.int32)
+        with self._stage_lock:
             self._staged[store.version] = arr
             limit = max(self.max_staged, min_slots)
             while len(self._staged) > limit:
                 self._staged.popitem(last=False)
-        else:
-            self._staged.move_to_end(store.version)
         return arr
 
     @staticmethod
@@ -244,9 +298,7 @@ class JaxBackend(MatcherBackend):
             k = store.shard_of_pred(tp.p)
             pair = (shards[k], int(store.shard_offsets[k]))
             return [pair] if shards[k].num_triples else []
-        return [(sh, int(off))
-                for sh, off in zip(shards, store.shard_offsets)
-                if sh.num_triples]
+        return [(sh, int(off)) for sh, off in store.parts()]
 
     @staticmethod
     def _pattern_vec(tp: TriplePattern) -> np.ndarray:
@@ -266,7 +318,8 @@ class JaxBackend(MatcherBackend):
             tids = tids[store.o[tids] == store.p[tids]]
         return tids
 
-    def candidates(self, store: RDFStore, tp: TriplePattern) -> np.ndarray:
+    def candidate_parts(self, store: RDFStore,
+                        tp: TriplePattern) -> CandidateParts:
         from ..kernels.triple_scan import triple_scan
         import jax.numpy as jnp
 
@@ -276,14 +329,16 @@ class JaxBackend(MatcherBackend):
         for flat, off in self._scan_parts(store, tp):
             mask = triple_scan(self._triples(flat, min_slots=slots), pat,
                                bt=self.bt, interpret=self.interpret)
-            parts.append(np.flatnonzero(np.asarray(mask)).astype(np.int64)
-                         + off)
-        tids = (np.concatenate(parts) if parts
-                else np.zeros(0, dtype=np.int64))
-        return self._repeated_var_filter(store, tp, tids)
+            tids = np.flatnonzero(np.asarray(mask)).astype(np.int64) + off
+            # the repeated-variable filter distributes over partitions
+            parts.append(self._repeated_var_filter(store, tp, tids))
+        return CandidateParts(parts)
 
-    def prescan(self, store: RDFStore,
-                tps: list[TriplePattern]) -> dict[tuple, np.ndarray]:
+    def candidates(self, store: RDFStore, tp: TriplePattern) -> np.ndarray:
+        return self.candidate_parts(store, tp).concat()
+
+    def prescan_parts(self, store: RDFStore, tps: list[TriplePattern],
+                      ) -> dict[tuple, CandidateParts]:
         from ..kernels.triple_scan import triple_scan_many
         import jax.numpy as jnp
 
@@ -311,14 +366,10 @@ class JaxBackend(MatcherBackend):
                 self._triples(flat, min_slots=slots), jnp.asarray(pats),
                 bt=self.bt, interpret=self.interpret))
             for i, k in enumerate(keys):
+                tids = np.flatnonzero(masks[i]).astype(np.int64) + off
                 parts[k].append(
-                    np.flatnonzero(masks[i]).astype(np.int64) + off)
-        out: dict[tuple, np.ndarray] = {}
-        for k, tp in uniq.items():
-            tids = (np.concatenate(parts[k]) if parts[k]
-                    else np.zeros(0, dtype=np.int64))
-            out[k] = self._repeated_var_filter(store, tp, tids)
-        return out
+                    self._repeated_var_filter(store, uniq[k], tids))
+        return {k: CandidateParts(parts[k]) for k in uniq}
 
 
 _BACKENDS: dict[str, Callable[..., MatcherBackend]] = {}
@@ -351,6 +402,27 @@ register_backend("jax", JaxBackend)
 
 @dataclass
 class EngineStats:
+    """Engine counters.
+
+    Scan-counter contract (asserted in ``tests/test_join_pipeline.py``):
+    ``scans_requested`` counts per-pattern scan *requests* — once per
+    planned scannable pattern of each result-cache-missed query at batch
+    start, plus once per unplanned mid-join lookup in the ``scan()``
+    closure (a key not covered by the batch's prescan). Planned patterns
+    are never re-counted by the closure (their keys are always memoized
+    before execution), so ``scans_requested >= scans_executed`` and
+    ``scans_deduped`` can never go negative; every executed scan
+    corresponds to exactly one scan-LRU miss (``scans_executed ==
+    scan_cache_misses``). Patterns taking the shard-local presorted join
+    (``JoinStep.use_pred_index``) never request a scan at all.
+
+    Per-phase timings: ``prescan_seconds`` (candidate-scan phase),
+    ``join_seconds`` (time inside ``match_bgp`` joins), ``exec_seconds``
+    (whole ``execute_batch`` calls, summed across overlapped threads).
+    ``join`` aggregates the :class:`~repro.sparql.matcher.JoinStats`
+    pipeline counters.
+    """
+
     queries: int = 0
     batches: int = 0
     cache_hits: int = 0
@@ -362,6 +434,9 @@ class EngineStats:
     scan_cache_misses: int = 0
     scan_cache_evictions: int = 0
     exec_seconds: float = 0.0
+    prescan_seconds: float = 0.0
+    join_seconds: float = 0.0
+    join: JoinStats = field(default_factory=JoinStats)
 
     @property
     def scans_deduped(self) -> int:
@@ -381,7 +456,8 @@ class QueryEngine:
                  cache_size: int = 256, max_rows: int = 5_000_000,
                  cache_bytes: int = 512 * 1024 * 1024,
                  scan_cache_bytes: int = 64 * 1024 * 1024,
-                 scan_cache_size: int = 4096) -> None:
+                 scan_cache_size: int = 4096,
+                 shard_local_joins: bool = True) -> None:
         self.backend = (backend if isinstance(backend, MatcherBackend)
                         else get_backend(backend))
         self.cache_size = int(cache_size)
@@ -396,27 +472,56 @@ class QueryEngine:
         self.scan_cache_bytes = int(scan_cache_bytes)
         self.scan_cache_size = int(scan_cache_size)
         self.max_rows = int(max_rows)
+        # False = global scan+sort joins (the pre-shard-parallel baseline,
+        # kept as the --join benchmark reference)
+        self.shard_local_joins = bool(shard_local_joins)
         self.stats = EngineStats()
         self._cache: OrderedDict[tuple, MatchResult] = OrderedDict()
         self._cached_bytes = 0
-        self._scan_cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        self._scan_cache: OrderedDict[tuple, CandidateParts] = OrderedDict()
         self._scan_cached_bytes = 0
+        # join plans keyed (store.version, canonical BGP key): planning is
+        # pure-Python (GIL-bound), so memoizing it both speeds cold batches
+        # and shrinks the serialized fraction of overlapped rounds
+        self._plan_cache: OrderedDict[tuple, list] = OrderedDict()
+        self._plan_cache_size = 4096
+        # guards caches + stats when one engine serves overlapped server
+        # batches from multiple threads; the matcher hot path runs unlocked
+        self._lock = threading.RLock()
 
     # -- cache ---------------------------------------------------------------
     def clear_cache(self) -> None:
-        self._cache.clear()
-        self._cached_bytes = 0
-        self._scan_cache.clear()
-        self._scan_cached_bytes = 0
+        with self._lock:
+            self._cache.clear()
+            self._cached_bytes = 0
+            self._scan_cache.clear()
+            self._scan_cached_bytes = 0
+            # join plans survive: like store.pred_index they are derived
+            # metadata (store-version-keyed, never stale), not cached data
+
+    def _plan_for(self, store: RDFStore, q: QueryGraph, ck: tuple) -> list:
+        key = (store.version, ck)
+        with self._lock:
+            plan = self._plan_cache.get(key)
+            if plan is not None:
+                self._plan_cache.move_to_end(key)
+                return plan
+        plan = plan_bgp(store, q, shard_local=self.shard_local_joins)
+        with self._lock:
+            self._plan_cache[key] = plan
+            while len(self._plan_cache) > self._plan_cache_size:
+                self._plan_cache.popitem(last=False)
+        return plan
 
     def _cache_get(self, key: tuple) -> MatchResult | None:
-        res = self._cache.get(key)
-        if res is not None:
-            self._cache.move_to_end(key)
-            self.stats.cache_hits += 1
-        else:
-            self.stats.cache_misses += 1
-        return res
+        with self._lock:
+            res = self._cache.get(key)
+            if res is not None:
+                self._cache.move_to_end(key)
+                self.stats.cache_hits += 1
+            else:
+                self.stats.cache_misses += 1
+            return res
 
     @staticmethod
     def _result_bytes(res: MatchResult) -> int:
@@ -428,43 +533,46 @@ class QueryEngine:
         nbytes = self._result_bytes(res)
         if nbytes > self.cache_bytes:
             return                       # would evict everything; skip
-        displaced = self._cache.pop(key, None)
-        if displaced is not None:        # overwrite: release the old bytes
-            self._cached_bytes -= self._result_bytes(displaced)
-        self._cache[key] = res
-        self._cached_bytes += nbytes
-        while (len(self._cache) > self.cache_size
-               or self._cached_bytes > self.cache_bytes):
-            _, old = self._cache.popitem(last=False)
-            self._cached_bytes -= self._result_bytes(old)
-            self.stats.cache_evictions += 1
+        with self._lock:
+            displaced = self._cache.pop(key, None)
+            if displaced is not None:    # overwrite: release the old bytes
+                self._cached_bytes -= self._result_bytes(displaced)
+            self._cache[key] = res
+            self._cached_bytes += nbytes
+            while (len(self._cache) > self.cache_size
+                   or self._cached_bytes > self.cache_bytes):
+                _, old = self._cache.popitem(last=False)
+                self._cached_bytes -= self._result_bytes(old)
+                self.stats.cache_evictions += 1
 
     # -- scan cache ----------------------------------------------------------
-    def _scan_cache_get(self, key: tuple) -> np.ndarray | None:
-        arr = self._scan_cache.get(key)
-        if arr is not None:
-            self._scan_cache.move_to_end(key)
-            self.stats.scan_cache_hits += 1
-        else:
-            self.stats.scan_cache_misses += 1
-        return arr
+    def _scan_cache_get(self, key: tuple) -> CandidateParts | None:
+        with self._lock:
+            parts = self._scan_cache.get(key)
+            if parts is not None:
+                self._scan_cache.move_to_end(key)
+                self.stats.scan_cache_hits += 1
+            else:
+                self.stats.scan_cache_misses += 1
+            return parts
 
-    def _scan_cache_put(self, key: tuple, tids: np.ndarray) -> None:
+    def _scan_cache_put(self, key: tuple, parts: CandidateParts) -> None:
         if self.scan_cache_bytes <= 0:
             return
-        nbytes = int(tids.nbytes)
+        nbytes = int(parts.nbytes)
         if nbytes > self.scan_cache_bytes:
             return
-        displaced = self._scan_cache.pop(key, None)
-        if displaced is not None:
-            self._scan_cached_bytes -= int(displaced.nbytes)
-        self._scan_cache[key] = tids
-        self._scan_cached_bytes += nbytes
-        while (len(self._scan_cache) > self.scan_cache_size
-               or self._scan_cached_bytes > self.scan_cache_bytes):
-            _, old = self._scan_cache.popitem(last=False)
-            self._scan_cached_bytes -= int(old.nbytes)
-            self.stats.scan_cache_evictions += 1
+        with self._lock:
+            displaced = self._scan_cache.pop(key, None)
+            if displaced is not None:
+                self._scan_cached_bytes -= int(displaced.nbytes)
+            self._scan_cache[key] = parts
+            self._scan_cached_bytes += nbytes
+            while (len(self._scan_cache) > self.scan_cache_size
+                   or self._scan_cached_bytes > self.scan_cache_bytes):
+                _, old = self._scan_cache.popitem(last=False)
+                self._scan_cached_bytes -= int(old.nbytes)
+                self.stats.scan_cache_evictions += 1
 
     @staticmethod
     def _remap(res: MatchResult, canon_to_actual: dict[str, str]
@@ -488,19 +596,29 @@ class QueryEngine:
         version changes).
         """
         t0 = time.perf_counter()
-        self.stats.batches += 1
-        self.stats.queries += len(queries)
+        with self._lock:
+            self.stats.batches += 1
+            self.stats.queries += len(queries)
 
         keyed = [query_key(q) for q in queries]
-        misses = [i for i, (ck, _) in enumerate(keyed)
-                  if (store.version, ck) not in self._cache]
+        with self._lock:
+            misses = [i for i, (ck, _) in enumerate(keyed)
+                      if (store.version, ck) not in self._cache]
 
-        # scan memo for this batch, seeded from the cross-batch scan LRU;
-        # the remaining distinct scan keys execute once via prescan
-        memo: dict[tuple, np.ndarray] = {}
+        # plan each cache-missed query so only the patterns the join
+        # pipeline will actually scan are prescanned (shard-local presorted
+        # joins skip the scan entirely); scan memo seeded from the
+        # cross-batch scan LRU, the remaining distinct keys execute once
+        memo: dict[tuple, CandidateParts] = {}
+        plans: dict[int, list] = {}
         if misses:
-            need = [tp for i in misses for tp in queries[i].patterns]
-            self.stats.scans_requested += len(need)
+            need: list[TriplePattern] = []
+            for i in misses:
+                plans[i] = self._plan_for(store, queries[i], keyed[i][0])
+                need += [queries[i].patterns[st.pattern]
+                         for st in plans[i] if st.needs_scan]
+            with self._lock:
+                self.stats.scans_requested += len(need)
             uniq: dict[tuple, TriplePattern] = {}
             for tp in need:
                 uniq.setdefault(scan_key(tp), tp)
@@ -512,25 +630,33 @@ class QueryEngine:
                 else:
                     fresh.append(tp)
             if fresh:
-                scanned = self.backend.prescan(store, fresh)
-                self.stats.scans_executed += len(scanned)
+                t_scan = time.perf_counter()
+                scanned = self.backend.prescan_parts(store, fresh)
                 memo.update(scanned)
-                for k, tids in scanned.items():
-                    self._scan_cache_put((store.version, k), tids)
+                for k, parts in scanned.items():
+                    self._scan_cache_put((store.version, k), parts)
+                with self._lock:
+                    self.stats.scans_executed += len(scanned)
+                    self.stats.prescan_seconds += (time.perf_counter()
+                                                   - t_scan)
 
-        def scan(st: RDFStore, tp: TriplePattern) -> np.ndarray:
+        def scan(st: RDFStore, tp: TriplePattern) -> CandidateParts:
             k = scan_key(tp)
-            if k not in memo:          # cache-missed pattern added mid-join
-                self.stats.scans_requested += 1
-                tids = self._scan_cache_get((st.version, k))
-                if tids is None:
-                    self.stats.scans_executed += 1
-                    tids = self.backend.candidates(st, tp)
-                    self._scan_cache_put((st.version, k), tids)
-                memo[k] = tids
+            if k not in memo:          # unplanned pattern added mid-join
+                with self._lock:
+                    self.stats.scans_requested += 1
+                parts = self._scan_cache_get((st.version, k))
+                if parts is None:
+                    parts = self.backend.candidate_parts(st, tp)
+                    self._scan_cache_put((st.version, k), parts)
+                    with self._lock:
+                        self.stats.scans_executed += 1
+                memo[k] = parts
             return memo[k]
 
         out: list[MatchResult | None] = [None] * len(queries)
+        join_dt = 0.0
+        join_stats = JoinStats()
         for i, q in enumerate(queries):
             ck, canon_to_actual = keyed[i]
             cached = self._cache_get((store.version, ck))
@@ -544,9 +670,16 @@ class QueryEngine:
                           else t for t in (tp.s, tp.p, tp.o)))
                         for tp in q.patterns],
                     projection=[])
+                t_join = time.perf_counter()
                 cached = match_bgp(store, canon_q, max_rows=self.max_rows,
-                                   candidates=scan)
+                                   candidates=scan, plan=plans.get(i),
+                                   stats=join_stats,
+                                   shard_local=self.shard_local_joins)
+                join_dt += time.perf_counter() - t_join
                 self._cache_put((store.version, ck), cached)
             out[i] = self._remap(cached, canon_to_actual)
-        self.stats.exec_seconds += time.perf_counter() - t0
+        with self._lock:
+            self.stats.join_seconds += join_dt
+            self.stats.join.merge(join_stats)
+            self.stats.exec_seconds += time.perf_counter() - t0
         return out
