@@ -36,6 +36,15 @@ Modes:
                           the number reported is the execute phase's wall
                           clock, best of interleaved repeats.
 
+``--rebalance`` adds the placement data-plane axis (PR 4): two identically
+drifted systems rebalance with full re-ship vs delta shipping
+(``rebalance_full_s{S}`` / ``rebalance_delta_s{S}`` — wall clock per
+rebalance, modeled wire bytes in ``derived``; delta must move strictly
+fewer bytes at the 100k+ scale), and a rebalance+round pair runs
+sequentially vs overlapped (``round_rebalance_sync_s{S}`` /
+``round_rebalance_overlap_s{S}`` — the async compute phase overlaps the
+round; commit waits at the epoch barrier).
+
 The workload repeats a pool of template queries (users re-issue hot
 queries), so scan dedup and the result cache both engage — the acceptance
 targets are ``engine_numpy_batch`` beating ``engine_loop`` on a >=64-query
@@ -91,8 +100,12 @@ def main() -> None:
     ap.add_argument("--join", action="store_true",
                     help="join-pipeline axis: shard-local vs global joins "
                          "+ overlapped vs sequential multi-edge rounds")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="placement data-plane axis: full re-ship vs delta "
+                         "rebalance bytes/wall-clock + sync vs overlapped "
+                         "rebalance-round pairs")
     ap.add_argument("--round-edges", type=int, default=4,
-                    help="edge servers in the --join overlap round")
+                    help="edge servers in the --join/--rebalance rounds")
     args = ap.parse_args()
     if args.batch < 1 or args.unique < 1 or args.scale <= 0:
         ap.error("--batch/--unique must be >= 1 and --scale > 0")
@@ -233,6 +246,82 @@ def main() -> None:
                          f"|batch={len(round_queries)}"
                          f"|mode={mode_seen[name]}{extra}"))
 
+    # ---- placement data-plane axis (--rebalance) --------------------------
+    reb_stats: dict[str, dict] = {}
+    if args.rebalance and shard_counts:
+        from repro.core.cost import SystemParams
+        from repro.edge.system import EdgeCloudSystem
+        S = max(shard_counts)
+        store_s = dict(stores)[f"_s{S}"]
+        K = max(2, args.round_edges)
+        # budget admits the whole prepared residency with room for the
+        # drift's additions: the regime delta shipping targets is
+        # incremental growth/partial overlap (a swap of one of few HUGE
+        # patterns is near-total churn, where plan_rebalance's wire-cost
+        # fallback re-ships in full — bounded at parity by construction)
+        budget = store_s.size_bytes()
+
+        def drifted_system():
+            """Deterministic system with *incremental* workload drift:
+            prepared on the template pool, then a few new templates turn
+            hot on top of it — the regime dynamic placement targets (most
+            residency unchanged, a handful of adds/evicts per epoch)."""
+            params = SystemParams.synthetic(n_users=max(8, 2 * K),
+                                            n_edges=K, seed=11)
+            sys_ = EdgeCloudSystem(store_s, g.dictionary, params,
+                                   storage_budgets=budget, backend="numpy")
+            sys_.prepare([texts for _ in range(params.N)])
+            drift_texts = texts + workload_sparql(
+                g, max(4, args.unique // 2), seed=777)
+            dq = [(i % params.N, parse_sparql(t, g.dictionary))
+                  for i, t in enumerate(drift_texts)]
+            for _ in range(3):
+                sys_.run_round_batched(dq, policy="greedy", execute=False)
+            return sys_, dq
+
+        for mode, use_deltas in (("full", False), ("delta", True)):
+            sys_r, dq = drifted_system()
+            t0 = time.perf_counter()
+            sys_r.rebalance_all(use_deltas=use_deltas)
+            dt = time.perf_counter() - t0
+            rep = sys_r.last_rebalance
+            reb_stats[mode] = {
+                "wall": dt, "bytes": rep.shipped_bytes,
+                "full_bytes": rep.full_bytes, "changed": rep.changed,
+                "matcher_calls": rep.matcher_calls,
+                "induced_hits": rep.induced_hits,
+                "changes": sum(a + e for a, e in rep.changes.values())}
+            rows.append((
+                f"rebalance_{mode}_s{S}", dt * 1e6,
+                f"backend=numpy|edges={K}|use_deltas={use_deltas}"
+                f"|bytes_shipped={rep.shipped_bytes}"
+                f"|pattern_changes={reb_stats[mode]['changes']}"
+                f"|matcher_calls={rep.matcher_calls}"
+                f"|induced_hits={rep.induced_hits}"
+                f"|commit_s={rep.commit_seconds:.4f}"))
+        if reb_stats["delta"]["bytes"]:
+            rows[-1] = (rows[-1][0], rows[-1][1], rows[-1][2] +
+                        f"|bytes_vs_full={reb_stats['full']['bytes'] / reb_stats['delta']['bytes']:.1f}x")
+
+        # sync (rebalance then round) vs overlapped (compute || round)
+        for mode in ("sync", "overlap"):
+            sys_r, dq = drifted_system()
+            t0 = time.perf_counter()
+            if mode == "sync":
+                sys_r.rebalance_all()
+                sys_r.run_round_batched(dq, policy="greedy", observe=False)
+            else:
+                handle = sys_r.rebalance_async()
+                sys_r.run_round_batched(dq, policy="greedy", observe=False)
+                handle.join(120)
+            dt = time.perf_counter() - t0
+            reb_stats[f"round_{mode}"] = {"wall": dt}
+            extra = ("" if mode == "sync" else
+                     f"|speedup_vs_sync="
+                     f"{reb_stats['round_sync']['wall'] / dt:.2f}x")
+            rows.append((f"round_rebalance_{mode}_s{S}", dt * 1e6,
+                         f"backend=numpy|edges={K}|batch={len(dq)}{extra}"))
+
     if not args.skip_jax:
         import jax
         mode = ("compiled" if jax.default_backend() == "tpu"
@@ -262,7 +351,9 @@ def main() -> None:
                 "repeats": args.repeats,
                 "jax": not args.skip_jax,
                 "join_axis": bool(args.join),
-                "round_edges": args.round_edges if args.join else None,
+                "rebalance_axis": bool(args.rebalance),
+                "round_edges": (args.round_edges
+                                if args.join or args.rebalance else None),
             },
             "rows": [{"name": n, "us_per_call": round(us, 3),
                       "qps": round(1e6 / us, 1), "derived": d}
@@ -289,6 +380,16 @@ def main() -> None:
         assert t_round["process"] < t_round["seq"], (
             f"process-overlapped round ({t_round['process']:.3f}s) should "
             f"beat the sequential round ({t_round['seq']:.3f}s)")
+    if args.rebalance and shard_counts:
+        assert reb_stats["delta"]["changed"], (
+            "drift workload produced no placement changes — the "
+            "full-vs-delta comparison is vacuous")
+        if g.store.num_triples >= 100_000:
+            assert (reb_stats["delta"]["bytes"]
+                    < reb_stats["full"]["bytes"]), (
+                f"delta rebalance ({reb_stats['delta']['bytes']}B) should "
+                f"ship strictly fewer bytes than full re-ship "
+                f"({reb_stats['full']['bytes']}B)")
 
 
 if __name__ == "__main__":

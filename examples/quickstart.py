@@ -46,9 +46,18 @@ def main() -> None:
         print(f"{policy:<12} {rep.objective:>12.3f} {edge_frac:>6.0%} "
               f"{rep.schedule_seconds * 1e3:>10.2f}")
 
-    # 5. dynamic placement update between rounds (async in the paper)
-    changes = system.rebalance_all()
+    # 5. dynamic placement: an asynchronous delta-rebalance overlapping the
+    # next round (compute runs on a background thread; the commit waits at
+    # the round's epoch barrier and ships only TripleDelta diffs)
+    handle = system.rebalance_async()
+    system.run_round(queries, policy="greedy")
+    report = handle.join()
+    changes = report.changes
     print(f"\nrebalance (added, evicted) per ES: {changes}")
+    print(f"epoch {report.epoch}: shipped {report.shipped_bytes}B as deltas"
+          f" (full re-ship: {report.full_bytes}B),"
+          f" {report.matcher_calls} matcher calls"
+          f" ({report.induced_hits} memo hits)")
 
 
 if __name__ == "__main__":

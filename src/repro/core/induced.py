@@ -20,6 +20,8 @@ Two construction paths:
 
 from __future__ import annotations
 
+import threading
+
 import numpy as np
 
 from ..rdf.graph import RDFStore
@@ -48,6 +50,89 @@ def induced_edge_ids(store: RDFStore, patterns: list[Pattern],
     if not parts:
         return np.zeros(0, dtype=np.int64)
     return np.unique(np.concatenate(parts))
+
+
+class InducedIndex:
+    """Memoized per-pattern induced-edge-id computation.
+
+    Entries are keyed ``(store.version, pattern.key)`` — version-granular,
+    because stores may now mutate in place through the delta protocol
+    (:mod:`repro.rdf.deltas`) and a memo keyed on pattern alone would go
+    stale the moment the cloud graph changes. For an unchanged cloud store,
+    repeated rebalances cost **zero** matcher calls for patterns already
+    measured (the regression test in ``tests/test_rebalance.py`` asserts
+    exactly that); only genuinely new ``(version, pattern)`` combinations
+    run the matcher. One index is shared across all edge servers of an
+    :class:`repro.edge.system.EdgeCloudSystem` — the same pattern measured
+    by two servers is matched once.
+    """
+
+    def __init__(self, method: str = "exact") -> None:
+        if method not in ("exact", "semijoin"):
+            raise ValueError(f"unknown method {method!r}")
+        self.method = method
+        # per-store-version working sets: {version: {pattern key: eids}}.
+        # Superseded versions are dropped as soon as a newer one is seen
+        # (under live cloud ingest every apply_delta shifts the id space,
+        # so old-version entries can never be served again) — bounding the
+        # memo at O(live versions x patterns) instead of growing forever.
+        self._memo: dict[object, dict[tuple, np.ndarray]] = {}
+        # in-flight computations, keyed (version, pattern key): concurrent
+        # callers (the parallel rebalance compute phase fans out over
+        # edges that often share patterns) wait on the owner instead of
+        # duplicating matcher work — "unchanged patterns cost zero matcher
+        # calls" holds per pattern even under concurrency
+        self._pending: dict[tuple, threading.Event] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def edge_ids(self, store: RDFStore, p: Pattern) -> np.ndarray:
+        """Cloud-global edge ids of ``G[{p}]`` (cached, read-only)."""
+        key = (store.version, p.key)
+        while True:
+            with self._lock:
+                per_ver = self._memo.get(store.version)
+                eids = None if per_ver is None else per_ver.get(p.key)
+                if eids is not None:
+                    self.hits += 1
+                    return eids
+                event = self._pending.get(key)
+                if event is None:
+                    self._pending[key] = event = threading.Event()
+                    self.misses += 1
+                    break                # this caller computes
+            event.wait()                 # another caller is computing;
+            #                              loop re-reads (or takes over on
+            #                              the owner's failure)
+        try:
+            fn = (induced_edge_ids if self.method == "exact"
+                  else induced_edge_ids_semijoin)
+            eids = fn(store, [p])       # matcher runs outside the lock
+            with self._lock:
+                if store.version not in self._memo:
+                    # a NEW version supersedes any other version's entries
+                    self._memo = {store.version: {}}
+                self._memo[store.version][p.key] = eids
+            return eids
+        finally:
+            with self._lock:
+                self._pending.pop(key, None)
+            event.set()
+
+    def union_edge_ids(self, store: RDFStore,
+                       patterns: list[Pattern]) -> np.ndarray:
+        """Union of per-pattern edge ids (each memoized independently, so
+        residency changes re-match only the patterns that are new)."""
+        parts = [e for p in patterns
+                 if len(e := self.edge_ids(store, p))]
+        if not parts:
+            return np.zeros(0, dtype=np.int64)
+        return np.unique(np.concatenate(parts))
+
+    def clear(self) -> None:
+        with self._lock:
+            self._memo.clear()
 
 
 def induced_subgraph(store: RDFStore, patterns: list[Pattern],

@@ -27,16 +27,33 @@ worker engines keep their own version-keyed caches — use
 jax-free process: forking live XLA runtime threads is unsafe, so jax
 engines — or any process where an XLA backend was already initialized —
 fall back to thread overlap.
+
+**Placement epochs (the rebalance handshake).** Placement is a first-class,
+continuously running part of the system: ``rebalance_async`` starts a
+:class:`repro.edge.rebalance.RebalanceManager` pass whose expensive compute
+phase (matching new patterns through the shared memoized
+:class:`repro.core.induced.InducedIndex`, planning residency under total +
+per-shard budgets, diffing edge stores into
+:class:`repro.rdf.deltas.TripleDelta`s) overlaps query rounds. Every round
+holds ``_placement_lock`` from scheduling through execution and the
+rebalance commits under the same lock, bumping ``placement_epoch`` — so the
+feasibility matrix ``e_nk``, the pattern indexes, and the edge stores
+always belong to ONE epoch and ``schedule(policy="bnb")`` can never route a
+query to an edge mid-eviction. ``rebalance_all`` is the synchronous form;
+both ship deltas by default (``use_deltas=False`` re-ships full induced
+subgraphs, kept for A/B in ``benchmarks/bench_engine.py --rebalance``).
 """
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from ..core.cost import (QueryTasks, SystemParams, estimate_query_cost)
+from ..core.induced import InducedIndex
 from ..core.pattern import Pattern, pattern_of
 from ..core.placement import PatternProfile, greedy_knapsack
 from ..core.scheduler import ScheduleResult, schedule
@@ -44,6 +61,7 @@ from ..rdf.graph import RDFStore
 from ..sparql.engine import QueryEngine
 from ..sparql.matcher import MatchResult
 from ..sparql.query import QueryGraph, parse_sparql
+from .rebalance import RebalanceHandle, RebalanceManager, RebalanceReport
 from .server import CloudServer, EdgeServer
 
 
@@ -156,7 +174,8 @@ class EdgeCloudSystem:
     def __init__(self, store: RDFStore, dictionary, params: SystemParams,
                  storage_budgets: np.ndarray | int,
                  backend: str = "numpy",
-                 engine: QueryEngine | None = None) -> None:
+                 engine: QueryEngine | None = None,
+                 shard_budgets=None) -> None:
         # one engine serves cloud + all edges: its result cache keys embed
         # the store version, so entries from different stores never collide
         self.engine = engine or QueryEngine(backend=backend)
@@ -165,14 +184,31 @@ class EdgeCloudSystem:
         self.params = params
         budgets = (np.full(params.K, storage_budgets)
                    if np.isscalar(storage_budgets) else storage_budgets)
+        # per-shard byte budgets (sharded cloud only): scalar = same budget
+        # for every shard, or a [num_shards] vector; applied at every edge
+        if shard_budgets is not None and np.isscalar(shard_budgets):
+            shard_budgets = np.full(getattr(store, "num_shards", 1),
+                                    int(shard_budgets))
+        # shared memoized induced-edge-id index: patterns measured once per
+        # cloud version across all edges (and across rebalances)
+        self.induced = InducedIndex()
         self.edges = [EdgeServer(k, int(budgets[k]), params.F[k],
-                                 engine=self.engine)
+                                 engine=self.engine,
+                                 shard_budgets=shard_budgets,
+                                 induced=self.induced)
                       for k in range(params.K)]
-        self._size_cache: dict[tuple, tuple] = {}
         self.construction_seconds = 0.0
         self._proc_pool = None
         self._proc_pool_versions: tuple | None = None
         self._engine_epoch = 0
+        # epoch/barrier handshake with the rebalance data-plane: rounds hold
+        # the lock from scheduling through execution; rebalance commits under
+        # it and bumps the epoch, so a round never observes a half-applied
+        # placement (see repro.edge.rebalance)
+        self._placement_lock = threading.RLock()
+        self.placement_epoch = 0
+        self.rebalancer = RebalanceManager(self)
+        self.last_rebalance: RebalanceReport | None = None
 
     # -- process-mode overlap pool -------------------------------------------
     def _store_versions(self) -> tuple:
@@ -248,43 +284,54 @@ class EdgeCloudSystem:
                     pats.append(p)
             per_user_patterns.append(pats)
 
-        for es in self.edges:
-            users = np.flatnonzero(self.params.assoc[:, es.server_id])
-            freq: dict[tuple, float] = {}
-            pat_by_key: dict[tuple, Pattern] = {}
-            for n in users:
-                if n < len(per_user_patterns):
-                    for p in per_user_patterns[n]:
-                        freq[p.key] = freq.get(p.key, 0.0) + 1.0
-                        pat_by_key.setdefault(p.key, p)
-            profiles = []
-            keys = list(freq)
-            for k in keys:
-                size = es.measure_pattern(self.cloud.store, pat_by_key[k],
-                                          self._size_cache)
-                profiles.append(PatternProfile(pat_by_key[k], freq[k], size))
-            chosen = greedy_knapsack(profiles, es.budget)
-            resident = [pat_by_key[keys[i]] for i in chosen]
-            es.deploy(self.cloud.store, resident)
-            for p in resident:
-                es.placement.observe(p, freq[p.key])
+        with self._placement_lock:
+            for es in self.edges:
+                users = np.flatnonzero(self.params.assoc[:, es.server_id])
+                freq: dict[tuple, float] = {}
+                pat_by_key: dict[tuple, Pattern] = {}
+                for n in users:
+                    if n < len(per_user_patterns):
+                        for p in per_user_patterns[n]:
+                            freq[p.key] = freq.get(p.key, 0.0) + 1.0
+                            pat_by_key.setdefault(p.key, p)
+                profiles = []
+                keys = list(freq)
+                for k in keys:
+                    size = es.measure_pattern(self.cloud.store,
+                                              pat_by_key[k])
+                    profiles.append(PatternProfile(
+                        pat_by_key[k], freq[k], size,
+                        es.placement.shard_sizes.get(k)))
+                chosen = greedy_knapsack(profiles, es.budget,
+                                         es.placement.shard_budgets)
+                resident = [pat_by_key[keys[i]] for i in chosen]
+                es.deploy(self.cloud.store, resident)
+                for p in resident:
+                    es.placement.observe(p, freq[p.key])
+            self.placement_epoch += 1
         self.construction_seconds = time.perf_counter() - t0
 
     # -- the online path ------------------------------------------------------
     def build_tasks(self, queries: list[tuple[int, QueryGraph]],
                     cost_source: str = "estimate") -> QueryTasks:
-        """(c, w, e) for a batch of (user, query) pairs (Eq. 2 via index)."""
+        """(c, w, e) for a batch of (user, query) pairs (Eq. 2 via index).
+
+        Taken under the placement lock so the feasibility matrix ``e_nk``
+        snapshots ONE placement epoch — it can never mix pre- and
+        post-rebalance residency across rows.
+        """
         N = len(queries)
         c = np.zeros(N)
         w = np.zeros(N)
         e = np.zeros((N, self.params.K))
-        for i, (user, q) in enumerate(queries):
-            c[i], w[i] = estimate_query_cost(self.cloud.store, q)
-            p = pattern_of(q)
-            for es in self.edges:
-                if self.params.assoc[user, es.server_id] and \
-                        es.can_execute(p):
-                    e[i, es.server_id] = 1.0
+        with self._placement_lock:
+            for i, (user, q) in enumerate(queries):
+                c[i], w[i] = estimate_query_cost(self.cloud.store, q)
+                p = pattern_of(q)
+                for es in self.edges:
+                    if self.params.assoc[user, es.server_id] and \
+                            es.can_execute(p):
+                        e[i, es.server_id] = 1.0
         return QueryTasks(c=c, w=w, e=e)
 
     def _schedule_round(self, queries: list[tuple[int, QueryGraph]],
@@ -332,6 +379,15 @@ class EdgeCloudSystem:
     def run_round(self, queries: list[tuple[int, QueryGraph]],
                   policy: str = "bnb", execute: bool = True,
                   observe: bool = True, **sched_kw) -> RoundReport:
+        # the round holds the placement lock from scheduling through
+        # execution: a concurrent rebalance computes in parallel but its
+        # commit (store mutation + index republish) waits for the barrier
+        with self._placement_lock:
+            return self._run_round_locked(queries, policy, execute,
+                                          observe, sched_kw)
+
+    def _run_round_locked(self, queries, policy, execute, observe,
+                          sched_kw) -> RoundReport:
         tasks, params_batch, sr, sched_dt = self._schedule_round(
             queries, policy, sched_kw)
 
@@ -398,7 +454,18 @@ class EdgeCloudSystem:
         rounds report identical outcomes (asserted in
         ``tests/test_join_pipeline.py``); only the round's
         ``execute_wall_seconds`` shrinks.
+
+        Like :meth:`run_round`, the whole round runs under the placement
+        lock (the rebalance epoch barrier).
         """
+        with self._placement_lock:
+            return self._run_round_batched_locked(
+                queries, policy, execute, observe, overlap, max_workers,
+                sched_kw)
+
+    def _run_round_batched_locked(self, queries, policy, execute, observe,
+                                  overlap, max_workers,
+                                  sched_kw) -> RoundReport:
         tasks, params_batch, sr, sched_dt = self._schedule_round(
             queries, policy, sched_kw)
 
@@ -493,11 +560,23 @@ class EdgeCloudSystem:
                            execute_wall_seconds=exec_wall,
                            server_wall_seconds=server_wall)
 
-    def rebalance_all(self) -> dict[int, tuple[int, int]]:
-        """Dynamic placement update across edge servers (async in paper)."""
-        out = {}
-        for es in self.edges:
-            out[es.server_id] = es.rebalance(self.cloud.store,
-                                             self._size_cache)
-            es.placement.decay_round()
-        return out
+    def rebalance_all(self, use_deltas: bool = True,
+                      ) -> dict[int, tuple[int, int]]:
+        """Synchronous dynamic placement update across edge servers.
+
+        Runs the full :class:`repro.edge.rebalance.RebalanceManager`
+        pipeline inline (incremental induced-id memo, delta shipping,
+        epoch-barrier commit) and returns ``{server_id: (n_added,
+        n_evicted)}``; the full :class:`~repro.edge.rebalance.
+        RebalanceReport` (bytes shipped, per-edge modes, timings) is kept
+        on ``self.last_rebalance``. ``use_deltas=False`` re-ships full
+        induced subgraphs (the pre-delta data-plane, kept for A/B).
+        """
+        return self.rebalancer.run(use_deltas=use_deltas).changes
+
+    def rebalance_async(self, use_deltas: bool = True) -> RebalanceHandle:
+        """Kick off a rebalance overlapping query rounds (paper §3.2's
+        "asynchronous background task"). The expensive compute phase runs
+        on a daemon thread; only the commit waits for the round barrier.
+        ``handle.join()`` returns the :class:`RebalanceReport`."""
+        return self.rebalancer.start(use_deltas=use_deltas)

@@ -32,10 +32,11 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
-# Monotone store-version tokens. Stores are immutable after construction
-# (rebalance/subgraph build NEW stores), so a fresh token per instance is a
-# sound cache-invalidation key: any result memoized against version v can
-# never be served for a store with different contents.
+# Monotone store-version tokens. Stores mutate ONLY through ``apply_delta``
+# (the placement data-plane, repro.rdf.deltas), which takes a fresh token —
+# so a version uniquely identifies store *contents* and stays a sound
+# cache-invalidation key: any result memoized against version v can never be
+# served for a store holding different triples.
 _STORE_VERSIONS = itertools.count()
 
 
@@ -97,6 +98,8 @@ class RDFStore(Protocol):
     def size_bytes(self) -> int: ...
 
     def subgraph(self, edge_ids: np.ndarray) -> "RDFStore": ...
+
+    def apply_delta(self, delta): ...
 
 
 class TripleStore:
@@ -172,6 +175,35 @@ class TripleStore:
     def size_bytes(self) -> int:
         """Storage cost of this (sub)graph — used by the placement knapsack."""
         return triples_size_bytes(self._T)
+
+    # -- incremental maintenance ----------------------------------------------
+    def apply_delta(self, delta):
+        """Apply a :class:`repro.rdf.deltas.TripleDelta` in place.
+
+        Content semantics are idempotent per side: adding a present row or
+        evicting an absent one is a no-op (the store is a deduplicated
+        set). Indexes are rebuilt, ``pred_index`` views dropped, and a
+        fresh version token is taken, so every version-keyed consumer
+        (engine result/scan/plan caches, staged device arrays) sees this
+        as a new store. Returns the new version.
+        """
+        from .deltas import DeltaVersionError, setdiff_rows
+        if delta.base_version != self.version:
+            raise DeltaVersionError(
+                f"delta targets version {delta.base_version!r}, store is at "
+                f"{self.version!r}")
+        rows = self.triples()
+        if len(delta.evict):
+            rows = setdiff_rows(rows, delta.evict)
+        if len(delta.add):
+            rows = np.concatenate([rows, delta.add])
+        rows = (np.unique(rows, axis=0) if len(rows)
+                else rows.reshape(0, 3))
+        self.s, self.p, self.o = rows[:, 0], rows[:, 1], rows[:, 2]
+        self.version = next(_STORE_VERSIONS)
+        self._pred_index.clear()
+        self._build_indexes()
+        return self.version
 
     # -- subgraph extraction ---------------------------------------------------
     def subgraph(self, edge_ids: np.ndarray) -> "TripleStore":

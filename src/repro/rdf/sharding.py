@@ -79,7 +79,15 @@ class ShardedTripleStore:
             TripleStore(s[owner == k], p[owner == k], o[owner == k],
                         self.num_entities, self.num_predicates)
             for k in range(self.num_shards)]
+        self._pred_index: dict[int, PredIndex] = {}
+        self._rebuild_global_layout()
 
+    def _rebuild_global_layout(self) -> None:
+        """(Re)derive the global-id view from the shard list: offsets,
+        concatenated arrays, aggregated stats, and a fresh composite
+        version. Called at construction and after ``apply_delta`` mutates
+        shards in place (global triple ids are ephemeral per version — every
+        id-consuming cache is version-keyed)."""
         # global id layout: shard k owns [offsets[k], offsets[k+1])
         sizes = np.asarray([sh.num_triples for sh in self.shards],
                            dtype=np.int64)
@@ -101,7 +109,38 @@ class ShardedTripleStore:
 
         self.version = (next(_STORE_VERSIONS),
                         *(sh.version for sh in self.shards))
-        self._pred_index: dict[int, PredIndex] = {}
+        self._pred_index.clear()
+
+    # -- incremental maintenance ----------------------------------------------
+    def apply_delta(self, delta):
+        """Apply a :class:`repro.rdf.deltas.TripleDelta` per shard, in place.
+
+        Rows are routed to their owning shards by predicate hash; **only
+        touched shards** are mutated and take fresh version tokens —
+        untouched shards keep theirs, so per-shard version-keyed consumers
+        (the engine's bound-predicate scan cache, the JAX backend's staged
+        device arrays) stay valid exactly where data did not change. The
+        composite version and global-id layout are rebuilt (shard sizes may
+        shift every offset after the first touched shard). Returns the new
+        composite version.
+        """
+        from .deltas import DeltaVersionError, TripleDelta
+        if delta.base_version != self.version:
+            raise DeltaVersionError(
+                f"delta targets version {delta.base_version!r}, store is at "
+                f"{self.version!r}")
+        add_owner = shard_of_pred(delta.add[:, 1],
+                                  self.num_shards).astype(np.int64)
+        ev_owner = shard_of_pred(delta.evict[:, 1],
+                                 self.num_shards).astype(np.int64)
+        touched = np.union1d(np.unique(add_owner), np.unique(ev_owner))
+        for k in touched:
+            sh = self.shards[int(k)]
+            sh.apply_delta(TripleDelta(base_version=sh.version,
+                                       add=delta.add[add_owner == k],
+                                       evict=delta.evict[ev_owner == k]))
+        self._rebuild_global_layout()
+        return self.version
 
     # -- sharding-specific accessors -----------------------------------------
     def shard_of_pred(self, pid: int) -> int:

@@ -13,6 +13,7 @@ inference here.
 
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable
@@ -43,13 +44,41 @@ class ServedBatch:
 
 
 class OffloadServingPool:
-    """Schedule + execute one admission batch of requests."""
+    """Schedule + execute one admission batch of requests.
+
+    Replica class sets are the serving analogue of edge pattern residency;
+    :meth:`republish` swaps one replica's classes (and optionally its
+    runner) atomically under the pool lock and bumps ``epoch`` — the same
+    commit-at-a-barrier contract :class:`repro.edge.rebalance.
+    RebalanceManager` gives the SPARQL system, so an admission batch
+    snapshots ONE epoch's feasibility and never routes a request class to
+    a replica mid-swap.
+    """
 
     def __init__(self, replicas: list[Replica], cloud_runner: Callable,
                  cloud_link_bps: float = 5e6) -> None:
         self.replicas = replicas
         self.cloud_runner = cloud_runner
         self.cloud_link_bps = cloud_link_bps
+        self._lock = threading.Lock()
+        self.epoch = 0
+
+    def republish(self, replica_id: int, classes,
+                  runner: Callable | None = None) -> int:
+        """Atomically update a replica's served classes (+runner); returns
+        the new epoch. Concurrent ``admit`` calls see either the old or the
+        new class set, never a partial one."""
+        with self._lock:
+            for rep in self.replicas:
+                if rep.replica_id == replica_id:
+                    rep.classes = set(classes)
+                    if runner is not None:
+                        rep.runner = runner
+                    break
+            else:
+                raise KeyError(f"no replica {replica_id!r}")
+            self.epoch += 1
+            return self.epoch
 
     def admit(self, requests: list[dict], policy: str = "bnb",
               execute: bool = True, overlap: bool = False,
@@ -65,10 +94,15 @@ class OffloadServingPool:
         N, K = len(requests), len(self.replicas)
         c = np.array([r["cycles"] for r in requests], dtype=np.float64)
         w = np.array([r["result_bits"] for r in requests], dtype=np.float64)
+        # snapshot ONE epoch's class sets (and runners), so e_nk rows and
+        # dispatch can't straddle a concurrent republish
+        with self._lock:
+            classes = [set(rep.classes) for rep in self.replicas]
+            runners = [rep.runner for rep in self.replicas]
         e = np.zeros((N, K))
         for i, r in enumerate(requests):
-            for j, rep in enumerate(self.replicas):
-                if r["class_id"] in rep.classes:
+            for j in range(K):
+                if r["class_id"] in classes[j]:
                     e[i, j] = 1.0
         params = SystemParams(
             F=np.array([rep.cycles_per_s for rep in self.replicas]),
@@ -97,7 +131,7 @@ class OffloadServingPool:
 
             def run_group(j: int, idx: np.ndarray):
                 runner = (self.cloud_runner if j < 0
-                          else (self.replicas[j].runner or self.cloud_runner))
+                          else (runners[j] or self.cloud_runner))
                 return idx, runner([requests[i]["payload"] for i in idx])
 
             if overlap:

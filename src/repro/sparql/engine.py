@@ -30,19 +30,26 @@ join results are identical as solution multisets.
 are keyed by their *scan key* — the pattern's constant components plus its
 repeated-variable equality structure (variable *names* don't matter for the
 scan). :meth:`QueryEngine.execute_batch` runs each distinct scan of a batch
-once; results additionally land in a byte-bounded LRU keyed
-``(store.version, scan key)``, so hot candidate scans survive *between*
-batches (``scan_cache_hits`` / ``scan_cache_misses`` in
-:class:`EngineStats`). Cached candidate arrays are shared — read-only.
+once; results additionally land in a byte-bounded LRU so hot candidate
+scans survive *between* batches (``scan_cache_hits`` /
+``scan_cache_misses`` in :class:`EngineStats`). LRU keys are
+**version-granular**: a bound-predicate scan on a sharded store keys on the
+predicate's OWNING SHARD's version and stores shard-local ids (re-lifted by
+the store's current offset at hit time), so a placement delta
+(:mod:`repro.rdf.deltas`) mutating other shards invalidates nothing here;
+wildcard scans and monolithic stores key on the full store version. Cached
+candidate arrays are shared — read-only.
 
 **3. LRU result cache.** Full match results are memoized under the key
 ``(store.version, pattern-key)`` where *pattern-key* is the query's BGP
 canonicalized by renaming variables in first-occurrence order — so
 alpha-equivalent queries (same shape, same constants, different variable
 names) share an entry, while queries differing in any constant do not.
-``store.version`` is a hashable token unique per store instance (a composite
-tuple over shard versions for sharded stores); rebalancing deploys a *new*
-store, so stale entries can never be served (they age out of the LRU).
+``store.version`` is a hashable token unique to the store's *contents* (a
+composite tuple over shard versions for sharded stores); rebalancing either
+deploys a new store or mutates one in place through the delta protocol —
+both take fresh version tokens, so stale entries can never be served (they
+age out of the LRU).
 Cached arrays are shared between hits — treat :class:`MatchResult` buffers
 as read-only.
 
@@ -478,7 +485,8 @@ class QueryEngine:
         self.stats = EngineStats()
         self._cache: OrderedDict[tuple, MatchResult] = OrderedDict()
         self._cached_bytes = 0
-        self._scan_cache: OrderedDict[tuple, CandidateParts] = OrderedDict()
+        # values are (CandidateParts, put-time global-id offset)
+        self._scan_cache: OrderedDict[tuple, tuple] = OrderedDict()
         self._scan_cached_bytes = 0
         # join plans keyed (store.version, canonical BGP key): planning is
         # pure-Python (GIL-bound), so memoizing it both speeds cold batches
@@ -546,7 +554,47 @@ class QueryEngine:
                 self.stats.cache_evictions += 1
 
     # -- scan cache ----------------------------------------------------------
-    def _scan_cache_get(self, key: tuple) -> CandidateParts | None:
+    @staticmethod
+    def _scan_entry(store: RDFStore, tp: TriplePattern,
+                    k: tuple) -> tuple[tuple, int]:
+        """(cache key, global-id offset) for one candidate scan.
+
+        Version-granular invalidation: a bound-predicate scan on a sharded
+        store touches exactly the predicate's owning shard, so its entry is
+        keyed by that SHARD's version and stored in shard-local ids — a
+        placement delta (:mod:`repro.rdf.deltas`) mutating other shards
+        leaves the entry valid, and the store's *current* offset re-lifts
+        the ids at hit time (offsets shift when earlier shards grow). All
+        other scans (wildcard predicate, monolithic store) key on the full
+        store version with offset 0. Shard version tokens are globally
+        unique, so entries can never collide across stores — and a shard
+        queried directly as a flat store shares its entries for free.
+        """
+        shards = getattr(store, "shards", None)
+        if shards is not None and isinstance(tp.p, int):
+            sid = store.shard_of_pred(tp.p)
+            return ((shards[sid].version, k),
+                    int(store.shard_offsets[sid]))
+        return (store.version, k), 0
+
+    def _scan_lookup(self, store: RDFStore, tp: TriplePattern,
+                     k: tuple) -> CandidateParts | None:
+        key, off = self._scan_entry(store, tp, k)
+        hit = self._scan_cache_get(key)
+        if hit is None:
+            return None
+        parts, stored_off = hit
+        # ids stored at put-time offsets: zero-copy (shift 0) until a delta
+        # actually moves this shard's offset or another store reuses the
+        # shard at a different global position
+        return parts.shifted(off - stored_off)
+
+    def _scan_store(self, store: RDFStore, tp: TriplePattern, k: tuple,
+                    parts: CandidateParts) -> None:
+        key, off = self._scan_entry(store, tp, k)
+        self._scan_cache_put(key, (parts, off))
+
+    def _scan_cache_get(self, key: tuple):
         with self._lock:
             parts = self._scan_cache.get(key)
             if parts is not None:
@@ -556,22 +604,24 @@ class QueryEngine:
                 self.stats.scan_cache_misses += 1
             return parts
 
-    def _scan_cache_put(self, key: tuple, parts: CandidateParts) -> None:
+    def _scan_cache_put(self, key: tuple, entry) -> None:
+        """``entry`` is ``(CandidateParts, put_time_offset)`` — see
+        :meth:`_scan_lookup`."""
         if self.scan_cache_bytes <= 0:
             return
-        nbytes = int(parts.nbytes)
+        nbytes = int(entry[0].nbytes)
         if nbytes > self.scan_cache_bytes:
             return
         with self._lock:
             displaced = self._scan_cache.pop(key, None)
             if displaced is not None:
-                self._scan_cached_bytes -= int(displaced.nbytes)
-            self._scan_cache[key] = parts
+                self._scan_cached_bytes -= int(displaced[0].nbytes)
+            self._scan_cache[key] = entry
             self._scan_cached_bytes += nbytes
             while (len(self._scan_cache) > self.scan_cache_size
                    or self._scan_cached_bytes > self.scan_cache_bytes):
                 _, old = self._scan_cache.popitem(last=False)
-                self._scan_cached_bytes -= int(old.nbytes)
+                self._scan_cached_bytes -= int(old[0].nbytes)
                 self.stats.scan_cache_evictions += 1
 
     @staticmethod
@@ -624,7 +674,7 @@ class QueryEngine:
                 uniq.setdefault(scan_key(tp), tp)
             fresh: list[TriplePattern] = []
             for k, tp in uniq.items():
-                hit = self._scan_cache_get((store.version, k))
+                hit = self._scan_lookup(store, tp, k)
                 if hit is not None:
                     memo[k] = hit
                 else:
@@ -634,7 +684,7 @@ class QueryEngine:
                 scanned = self.backend.prescan_parts(store, fresh)
                 memo.update(scanned)
                 for k, parts in scanned.items():
-                    self._scan_cache_put((store.version, k), parts)
+                    self._scan_store(store, uniq[k], k, parts)
                 with self._lock:
                     self.stats.scans_executed += len(scanned)
                     self.stats.prescan_seconds += (time.perf_counter()
@@ -645,10 +695,10 @@ class QueryEngine:
             if k not in memo:          # unplanned pattern added mid-join
                 with self._lock:
                     self.stats.scans_requested += 1
-                parts = self._scan_cache_get((st.version, k))
+                parts = self._scan_lookup(st, tp, k)
                 if parts is None:
                     parts = self.backend.candidate_parts(st, tp)
-                    self._scan_cache_put((st.version, k), parts)
+                    self._scan_store(st, tp, k, parts)
                     with self._lock:
                         self.stats.scans_executed += 1
                 memo[k] = parts

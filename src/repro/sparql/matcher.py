@@ -98,6 +98,20 @@ class CandidateParts:
             return self.parts[0]
         return np.concatenate(self.parts)
 
+    def shifted(self, delta: int) -> "CandidateParts":
+        """A copy with every id shifted by ``delta`` (``0`` returns self).
+
+        Lets the engine's scan LRU store bound-predicate candidates in
+        shard-LOCAL coordinates keyed by the owning shard's version: a
+        placement delta to another shard moves this shard's global-id
+        offset but not its content, and the hit is re-lifted here.
+        """
+        if not delta:
+            return self
+        out = CandidateParts.__new__(CandidateParts)
+        out.parts = [p + delta for p in self.parts]
+        return out
+
     def __len__(self) -> int:  # pragma: no cover - convenience
         return self.total
 

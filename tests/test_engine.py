@@ -219,7 +219,8 @@ def test_scan_cache_byte_bound_eviction():
     eng.execute_batch(store, qs)
     assert eng.stats.scan_cache_evictions > 0
     assert eng._scan_cached_bytes <= eng.scan_cache_bytes
-    assert sum(a.nbytes for a in eng._scan_cache.values()) == \
+    # entries are (CandidateParts, put-time global-id offset)
+    assert sum(parts.nbytes for parts, _ in eng._scan_cache.values()) == \
         eng._scan_cached_bytes
     eng.clear_cache()
     assert eng._scan_cached_bytes == 0 and not eng._scan_cache

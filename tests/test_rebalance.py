@@ -1,0 +1,541 @@
+"""Incremental placement & asynchronous delta-rebalance subsystem.
+
+Covers the delta protocol (round-trip, version guards, per-shard
+granularity), the engine's version-granular scan-cache invalidation, the
+induced-edge-id memo (zero matcher calls on a no-op rebalance), per-shard
+placement budgets + hysteresis, delta-vs-full equivalence and bytes, and
+the epoch/barrier handshake (concurrent rebalance parity + feasibility).
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.cost import SystemParams
+from repro.core.pattern import pattern_of
+from repro.core.placement import (DynamicPlacement, PatternProfile,
+                                  greedy_knapsack)
+from repro.edge.system import EdgeCloudSystem
+from repro.rdf.deltas import DeltaVersionError, TripleDelta, delta_between
+from repro.rdf.generator import generate_watdiv_like, workload_sparql
+from repro.rdf.graph import TripleStore
+from repro.rdf.sharding import ShardedTripleStore
+from repro.sparql.engine import QueryEngine
+from repro.sparql.matcher import match_bgp
+from repro.sparql.query import QueryGraph, TriplePattern, parse_sparql
+
+
+def rows_set(store):
+    return np.unique(store.triples(), axis=0)
+
+
+def sol_rows(res):
+    order = sorted(res.var_names)
+    idx = [res.var_names.index(v) for v in order]
+    return {tuple(r[idx]) for r in res.bindings}
+
+
+def make_store(kind, s, p, o, ne, npred):
+    if kind == "sharded":
+        return ShardedTripleStore(s, p, o, ne, npred, num_shards=3)
+    return TripleStore(s, p, o, ne, npred)
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    return generate_watdiv_like(scale=0.5, seed=37)
+
+
+# ---------------------------------------------------------------------------
+# delta protocol
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["mono", "sharded"])
+def test_delta_round_trip_restores_bytes_and_version(kind):
+    rng = np.random.default_rng(1)
+    s, p, o = (rng.integers(0, 40, 300), rng.integers(0, 12, 300),
+               rng.integers(0, 40, 300))
+    st = make_store(kind, s, p, o, 40, 12)
+    v0, before = st.version, rows_set(st)
+    target = np.unique(np.concatenate(
+        [st.triples()[25:], np.array([[0, 5, 1], [2, 7, 3]])]), axis=0)
+    d = delta_between(st, target)
+    assert not d.is_noop and d.n_evict > 0 and d.n_add > 0
+    v1 = st.apply_delta(d)
+    assert v1 != v0
+    assert np.array_equal(rows_set(st), target)
+    v2 = st.apply_delta(d.inverse(v1))
+    # content restored exactly; versions are fresh on every apply (a version
+    # token identifies contents AND history position — never reused)
+    assert np.array_equal(rows_set(st), before)
+    assert v2 not in (v0, v1)
+
+
+@pytest.mark.parametrize("kind", ["mono", "sharded"])
+def test_delta_version_guard(kind):
+    rng = np.random.default_rng(2)
+    st = make_store(kind, rng.integers(0, 20, 100), rng.integers(0, 6, 100),
+                    rng.integers(0, 20, 100), 20, 6)
+    d = delta_between(st, st.triples()[10:])
+    st.apply_delta(d)
+    with pytest.raises(DeltaVersionError):
+        st.apply_delta(d)                 # store moved; stale delta rejected
+
+
+def test_delta_apply_is_idempotent_per_side():
+    rng = np.random.default_rng(3)
+    st = TripleStore(rng.integers(0, 20, 100), rng.integers(0, 6, 100),
+                     rng.integers(0, 20, 100), 20, 6)
+    present = st.triples()[:1]
+    absent = np.array([[19, 5, 19]])
+    assert not (rows_set(st) == absent[0]).all(1).any()
+    d = TripleDelta(base_version=st.version, add=present, evict=absent)
+    before = rows_set(st)
+    st.apply_delta(d)                     # add-present + evict-absent: no-op
+    assert np.array_equal(rows_set(st), before)
+
+
+def test_sharded_delta_touches_only_owning_shards():
+    rng = np.random.default_rng(4)
+    s, p, o = (rng.integers(0, 40, 400), rng.integers(0, 12, 400),
+               rng.integers(0, 40, 400))
+    st = ShardedTripleStore(s, p, o, 40, 12, num_shards=4)
+    pid = 3
+    owner = st.shard_of_pred(pid)
+    shard_versions = [sh.version for sh in st.shards]
+    d = delta_between(st, np.concatenate(
+        [st.triples(), np.array([[39, pid, 38]])]))
+    st.apply_delta(d)
+    changed = [k for k, sh in enumerate(st.shards)
+               if sh.version != shard_versions[k]]
+    assert changed == [owner]
+    # global layout stays consistent with a from-scratch construction
+    ref = ShardedTripleStore(st.s, st.p, st.o, 40, 12, num_shards=4)
+    assert np.array_equal(st.pred_count, ref.pred_count)
+    for q in range(12):
+        assert np.array_equal(np.sort(st.p[st.pred_tids(q)]),
+                              np.sort(ref.p[ref.pred_tids(q)]))
+
+
+@pytest.mark.parametrize("kind", ["mono", "sharded"])
+@pytest.mark.parametrize("backend", [
+    "numpy", pytest.param("jax", marks=pytest.mark.slow)])
+def test_query_results_equal_after_in_place_delta(kind, backend,
+                                                  small_graph):
+    """Engine results on a delta-mutated store == a store freshly built
+    from the same triples (indexes, caches, staging all rebuilt)."""
+    g = small_graph
+    st = (ShardedTripleStore.from_store(g.store, 3) if kind == "sharded"
+          else TripleStore(g.store.s, g.store.p, g.store.o,
+                           g.store.num_entities, g.store.num_predicates))
+    qs = [parse_sparql(t, g.dictionary)
+          for t in workload_sparql(g, 6, seed=11)]
+    eng = QueryEngine(backend=backend)
+    eng.execute_batch(st, qs)             # warm caches on the old version
+    d = delta_between(st, st.triples()[st.num_triples // 10:])
+    st.apply_delta(d)
+    fresh = make_store(kind, st.s, st.p, st.o, st.num_entities,
+                       st.num_predicates)
+    for res, ref in zip(eng.execute_batch(st, qs),
+                        eng.execute_batch(fresh, qs)):
+        assert sol_rows(res) == sol_rows(ref)
+
+
+def test_scan_cache_invalidates_only_touched_shard(small_graph):
+    """Version-granular invalidation: a delta to one shard leaves cached
+    bound-predicate scans of other shards valid (and re-lifts their ids by
+    the store's shifted offsets)."""
+    g = small_graph
+    st = ShardedTripleStore.from_store(g.store, 4)
+    # two bound-predicate patterns owned by different shards
+    pids = {}
+    for pid in range(st.num_predicates):
+        if st.pred_count[pid]:
+            pids.setdefault(st.shard_of_pred(pid), pid)
+        if len(pids) >= 2:
+            break
+    assert len(pids) >= 2, "need predicates in two different shards"
+    (shard_a, pid_a), (shard_b, pid_b) = list(pids.items())[:2]
+    # constant subjects force real candidate scans (free-s/o bound-predicate
+    # patterns would take the presorted pred_index join and never scan)
+    s_a = int(st.s[st.pred_tids(pid_a)[0]])
+    s_b = int(st.s[st.pred_tids(pid_b)[0]])
+    q = QueryGraph([TriplePattern(s_a, pid_a, "?y"),
+                    TriplePattern(s_b, pid_b, "?z")], [])
+    eng = QueryEngine(backend="numpy")
+    eng.execute_batch(st, [q])
+    # mutate ONLY shard_a (grow it so every later shard's offset shifts)
+    add = np.array([[st.num_entities - 1, pid_a, st.num_entities - 2]])
+    st.apply_delta(TripleDelta(base_version=st.version, add=add))
+    h0, m0 = eng.stats.scan_cache_hits, eng.stats.scan_cache_misses
+    res = eng.execute_batch(st, [q])[0]
+    # pid_b's scan (untouched shard) hits; pid_a's (touched) re-scans
+    assert eng.stats.scan_cache_hits == h0 + 1
+    assert eng.stats.scan_cache_misses == m0 + 1
+    assert sol_rows(res) == sol_rows(match_bgp(st, q))
+
+
+# ---------------------------------------------------------------------------
+# placement policy: per-shard budgets, tie-breaks, hysteresis
+# ---------------------------------------------------------------------------
+
+
+def test_knapsack_pattern_larger_than_budget_never_selected():
+    profs = [PatternProfile(None, frequency=100, size_bytes=500),
+             PatternProfile(None, frequency=1, size_bytes=10)]
+    assert greedy_knapsack(profs, budget_bytes=100) == [1]
+    assert greedy_knapsack(profs, budget_bytes=0) == []
+
+
+def test_knapsack_per_shard_budget_rejects_hot_shard_overflow():
+    profs = [
+        # hottest, but all bytes land in shard 0 (over its budget)
+        PatternProfile(None, 100, 80, shard_bytes={0: 80}),
+        # spread across shards: fits everywhere
+        PatternProfile(None, 50, 80, shard_bytes={0: 40, 1: 40}),
+        # no shard info: total check only
+        PatternProfile(None, 10, 20),
+    ]
+    assert greedy_knapsack(profs, budget_bytes=1000) == [0, 1, 2]
+    chosen = greedy_knapsack(profs, budget_bytes=1000,
+                             shard_budgets={0: 60, 1: 60})
+    assert chosen == [1, 2]
+    # zero budget on one shard blocks everything touching it
+    assert greedy_knapsack(profs, budget_bytes=1000,
+                           shard_budgets={0: 0, 1: 60}) == [2]
+
+
+def test_knapsack_frequency_tiebreak_after_decay():
+    # equal benefit/cost ratio -> higher absolute frequency wins the slot
+    profs = [PatternProfile(None, 10, 100), PatternProfile(None, 100, 1000)]
+    assert greedy_knapsack(profs, budget_bytes=1000) == [1]
+    dp = DynamicPlacement(budget_bytes=1000)
+    q1 = QueryGraph([TriplePattern("?x", 0, "?y")], [])
+    q2 = QueryGraph([TriplePattern("?x", 1, "?y")], [])
+    p1, p2 = pattern_of(q1), pattern_of(q2)
+    dp.set_size(p1, 100), dp.set_size(p2, 1000)
+    dp.observe(p1, 10), dp.observe(p2, 100)
+    chosen, _, _ = dp.plan()
+    for _ in range(5):
+        dp.decay_round()                 # decay preserves ratios AND order
+    chosen2, _, _ = dp.plan()
+    assert chosen == chosen2 == {p2.key}
+
+
+def test_hysteresis_damps_add_evict_flapping():
+    q_a = QueryGraph([TriplePattern("?x", 0, "?y")], [])
+    q_b = QueryGraph([TriplePattern("?x", 1, "?y")], [])
+    pa, pb = pattern_of(q_a), pattern_of(q_b)
+    dp = DynamicPlacement(budget_bytes=100, hysteresis=0.2)
+    dp.set_size(pa, 100), dp.set_size(pb, 100)
+    dp.observe(pa, 10)
+    added, evicted = dp.rebalance()
+    assert [p.key for p in added] == [pa.key]
+    # challenger 10% hotter: within the 20% hysteresis margin -> no flip
+    dp.observe(pb, 11)
+    chosen, _, ev = dp.plan()
+    assert not ev and chosen == {pa.key}
+    # challenger 50% hotter: beats the margin -> swap happens
+    dp.observe(pb, 4)
+    chosen, add, ev = dp.plan()
+    assert chosen == {pb.key} and ev == {pa.key}
+    # without hysteresis the 10%-hotter challenger would have flipped
+    dp0 = DynamicPlacement(budget_bytes=100)
+    dp0.set_size(pa, 100), dp0.set_size(pb, 100)
+    dp0.observe(pa, 10), dp0.rebalance()
+    dp0.observe(pb, 11)
+    assert dp0.plan()[0] == {pb.key}
+
+
+def test_placement_respects_per_shard_budgets_end_to_end(small_graph):
+    g = small_graph
+    store = ShardedTripleStore.from_store(g.store, 3)
+    params = SystemParams.synthetic(n_users=6, n_edges=2, seed=3)
+    per_shard = 60_000
+    sys_ = EdgeCloudSystem(store, g.dictionary, params,
+                           storage_budgets=150_000,
+                           shard_budgets=per_shard)
+    sys_.prepare([workload_sparql(g, 4, seed=500 + n) for n in range(6)])
+    queries = [(i % 6, parse_sparql(t, g.dictionary))
+               for i, t in enumerate(workload_sparql(g, 8, seed=21))]
+    for _ in range(2):
+        sys_.run_round_batched(queries, policy="greedy", execute=False)
+    sys_.rebalance_all()
+    deployed = 0
+    for es in sys_.edges:
+        assert es.placement.used_bytes() <= es.budget
+        for sid, used in es.placement.used_shard_bytes().items():
+            assert used <= per_shard, (es.server_id, sid)
+        deployed += bool(es.placement.resident)
+    assert deployed >= 1
+
+
+# ---------------------------------------------------------------------------
+# incremental rebalance: memo, deltas, bytes
+# ---------------------------------------------------------------------------
+
+
+def build_system(g, kind, backend="numpy", seed=7, budget=150_000):
+    store = (ShardedTripleStore.from_store(g.store, 3) if kind == "sharded"
+             else g.store)
+    params = SystemParams.synthetic(n_users=8, n_edges=3, seed=seed)
+    sys_ = EdgeCloudSystem(store, g.dictionary, params,
+                           storage_budgets=budget, backend=backend)
+    sys_.prepare([workload_sparql(g, 3, seed=100 + n) for n in range(8)])
+    return sys_
+
+
+def drift(g, sys_, seed=77, n=10, rounds=3):
+    """Shift the workload so placement wants adds + evicts."""
+    queries = [(i % sys_.params.N, parse_sparql(t, g.dictionary))
+               for i, t in enumerate(workload_sparql(g, n, seed=seed))]
+    for _ in range(rounds):
+        sys_.run_round_batched(queries, policy="greedy", execute=False)
+    return queries
+
+
+def test_noop_rebalance_runs_zero_matcher_calls(small_graph, monkeypatch):
+    """Regression (ISSUE 4 satellite 1): unchanged patterns cost zero
+    matcher calls — the induced-edge-id memo is keyed (cloud version,
+    pattern key)."""
+    g = small_graph
+    sys_ = build_system(g, "mono")
+    drift(g, sys_)
+    sys_.rebalance_all()                  # measures any new patterns once
+    calls = []
+    import repro.core.induced as induced_mod
+    real = induced_mod.match_bgp
+    monkeypatch.setattr(induced_mod, "match_bgp",
+                        lambda *a, **k: calls.append(1) or real(*a, **k))
+    changes = sys_.rebalance_all()        # no new observations since
+    assert calls == [], "no-op rebalance must not re-derive subgraphs"
+    assert sys_.last_rebalance.matcher_calls == 0
+    assert all(a == 0 and e == 0 for a, e in changes.values())
+    # ... and a residency CHANGE still only matches genuinely new patterns
+    new_q = parse_sparql(
+        "SELECT ?a WHERE { ?a <follows> ?b . ?b <follows> ?c . "
+        "?c <follows> ?a }", g.dictionary)
+    p = pattern_of(new_q)
+    for es in sys_.edges:
+        es.placement.observe(p, 50.0)
+    sys_.rebalance_all()
+    assert len(calls) == 1, "only the ONE new pattern hits the matcher"
+
+
+@pytest.mark.parametrize("kind", ["mono", "sharded"])
+def test_delta_and_full_rebalance_agree(small_graph, kind):
+    g = small_graph
+    sys_d = build_system(g, kind)
+    sys_f = build_system(g, kind)
+    qs = drift(g, sys_d)
+    drift(g, sys_f)
+    ch_d = sys_d.rebalance_all(use_deltas=True)
+    ch_f = sys_f.rebalance_all(use_deltas=False)
+    assert ch_d == ch_f
+    rep_d, rep_f = sys_d.last_rebalance, sys_f.last_rebalance
+    for es_d, es_f in zip(sys_d.edges, sys_f.edges):
+        assert es_d.placement.resident == es_f.placement.resident
+        if es_d.store is not None and es_f.store is not None:
+            assert np.array_equal(rows_set(es_d.store), rows_set(es_f.store))
+            assert np.array_equal(np.sort(es_d.resident_eids),
+                                  np.sort(es_f.resident_eids))
+    if rep_d.changed:
+        modes = {e.mode for e in rep_d.per_edge if e.shipped_bytes}
+        assert modes <= {"delta"}
+        assert rep_d.shipped_bytes < rep_f.shipped_bytes
+    # queries still answer identically to the cloud afterwards
+    for (_, q) in qs[:4]:
+        p = pattern_of(q)
+        want = sol_rows(sys_d.engine.execute(sys_d.cloud.store, q))
+        for es in sys_d.edges:
+            if es.can_execute(p):
+                assert sol_rows(sys_d.engine.execute(es.store, q)) == want
+
+
+@pytest.mark.parametrize("kind", ["mono", "sharded"])
+@pytest.mark.parametrize("use_delta", [True, False])
+def test_cloud_mutation_resyncs_edges_without_pattern_changes(kind,
+                                                              use_delta):
+    """Review regression: a cloud-store delta (live ingest) with an
+    UNCHANGED resident pattern set must still refresh edge stores — and
+    the diff must not trust edge ids across cloud versions (the cloud id
+    space shifts under apply_delta)."""
+    rng = np.random.default_rng(8)
+    n = 400
+    s, p, o = (rng.integers(0, 60, n), rng.integers(0, 8, n),
+               rng.integers(0, 60, n))
+    cloud = make_store(kind, s, p, o, 60, 8)
+    from repro.edge.server import EdgeServer
+    es = EdgeServer(0, 10**9, 1e8)
+    q = QueryGraph([TriplePattern("?x", 0, "?y")], [])
+    pat = pattern_of(q)
+    es.placement.observe(pat, 5.0)
+    es.measure_pattern(cloud, pat)
+    es.deploy(cloud, [pat])
+    assert sol_rows(match_bgp(es.store, q)) == sol_rows(match_bgp(cloud, q))
+    # live ingest: pred-0 rows appear and one disappears; id space shifts
+    d = delta_between(cloud, np.concatenate(
+        [cloud.triples()[5:], np.array([[58, 0, 59], [59, 0, 58]])]))
+    cloud.apply_delta(d)
+    changes = es.rebalance(cloud, use_delta=use_delta)
+    assert changes == (0, 0)               # pattern set did not change...
+    # ...but the edge was resynced to the new cloud content
+    assert sol_rows(match_bgp(es.store, q)) == sol_rows(match_bgp(cloud, q))
+    assert es.resident_cloud_version == cloud.version
+    # and a further no-op rebalance commits nothing
+    v = es.store.version
+    es.rebalance(cloud, use_delta=use_delta)
+    assert es.store.version == v
+
+
+def test_cloud_moving_between_compute_and_commit_forces_recompute(
+        small_graph):
+    """Review regression: plans are bound to the cloud version they were
+    computed against — a cloud delta landing between the lock-free compute
+    phase and the commit barrier must trigger a recompute, never a commit
+    of stale id-space coordinates."""
+    g = small_graph
+    sys_ = build_system(g, "mono")
+    queries = drift(g, sys_)
+    fired = {"n": 0}
+
+    def ingest_once():
+        fired["n"] += 1
+        if fired["n"] == 1:              # mutate the cloud mid-rebalance
+            cloud = sys_.cloud.store
+            d = delta_between(cloud, np.concatenate(
+                [cloud.triples()[3:],
+                 np.array([[0, 0, 1], [1, 0, 2]])]))
+            cloud.apply_delta(d)
+
+    sys_.rebalancer.pre_commit_hook = ingest_once
+    sys_.rebalance_all()
+    assert fired["n"] == 2               # first plan discarded, recomputed
+    for es in sys_.edges:
+        assert es.resident_cloud_version == sys_.cloud.store.version
+    q = queries[0][1]
+    p = pattern_of(q)
+    want = sol_rows(sys_.engine.execute(sys_.cloud.store, q))
+    for es in sys_.edges:
+        if es.can_execute(p):
+            assert sol_rows(sys_.engine.execute(es.store, q)) == want
+
+
+# ---------------------------------------------------------------------------
+# epoch/barrier handshake: parity + feasibility under concurrency
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["mono", "sharded"])
+@pytest.mark.parametrize("backend", [
+    "numpy", pytest.param("jax", marks=pytest.mark.slow)])
+def test_overlapped_rebalance_parity(small_graph, kind, backend):
+    """Acceptance: a round concurrent with an overlapped rebalance returns
+    byte-identical results to sequential rebalance-then-round."""
+    g = small_graph
+    sys_a = build_system(g, kind, backend=backend)
+    sys_b = build_system(g, kind, backend=backend)
+    queries = drift(g, sys_a)
+    drift(g, sys_b)
+
+    # A: sequential rebalance, then round
+    sys_a.rebalance_all()
+    rep_a = sys_a.run_round_batched(queries, policy="greedy", observe=False)
+
+    # B: rebalance overlaps the round; its commit races the round's barrier
+    release = threading.Event()
+    sys_b.rebalancer.pre_commit_hook = lambda: release.wait(10)
+    handle = sys_b.rebalance_async()
+    round_out = {}
+
+    def run_round():
+        round_out["rep"] = sys_b.run_round_batched(
+            queries, policy="greedy", observe=False)
+
+    t = threading.Thread(target=run_round)
+    t.start()
+    release.set()                        # commit and round now race the lock
+    t.join(30)
+    assert not t.is_alive()
+    report = handle.join(30)
+    rep_b = round_out["rep"]
+
+    # byte-identical per-query results, whatever the interleaving
+    assert ([o.n_matches for o in rep_a.outcomes]
+            == [o.n_matches for o in rep_b.outcomes])
+    # after the epoch commits, both systems converged to the same residency
+    # and the same edge-store bytes
+    for es_a, es_b in zip(sys_a.edges, sys_b.edges):
+        assert es_a.placement.resident == es_b.placement.resident
+        if es_a.store is not None:
+            assert np.array_equal(rows_set(es_a.store), rows_set(es_b.store))
+    assert report.epoch == sys_b.placement_epoch
+    # post-commit round: solution multisets equal to the cloud oracle
+    # (byte-identical bindings under a canonical row order)
+    for (_, q) in queries[:3]:
+        p = pattern_of(q)
+        want = sol_rows(sys_b.engine.execute(sys_b.cloud.store, q))
+        for es in sys_b.edges:
+            if es.can_execute(p):
+                assert sol_rows(sys_b.engine.execute(es.store, q)) == want
+
+
+def test_feasibility_never_stale_under_hammered_rebalance(small_graph):
+    """Satellite 2: e_nk is wired to placement epochs — no query is ever
+    assigned to an edge lacking its pattern, even with rebalances
+    hammering placement between and during rounds."""
+    g = small_graph
+    sys_ = build_system(g, "sharded")
+    queries = drift(g, sys_)
+    stop = threading.Event()
+    errors = []
+
+    def hammer():
+        try:
+            while not stop.is_set():
+                sys_.rebalance_all()
+        except Exception as exc:         # pragma: no cover
+            errors.append(exc)
+
+    t = threading.Thread(target=hammer)
+    t.start()
+    try:
+        epoch0 = sys_.placement_epoch
+        for i in range(6):
+            rep = sys_.run_round_batched(queries, policy="greedy",
+                                         observe=True)
+            for o in rep.outcomes:
+                if o.assigned_to >= 0:
+                    assert o.assigned_to in o.executable_edges
+    finally:
+        stop.set()
+        t.join(30)
+    assert not errors
+    assert sys_.placement_epoch > epoch0   # rebalances actually committed
+    # final state still answers correctly
+    for (_, q) in queries[:3]:
+        p = pattern_of(q)
+        want = sol_rows(sys_.engine.execute(sys_.cloud.store, q))
+        for es in sys_.edges:
+            if es.can_execute(p):
+                assert sol_rows(sys_.engine.execute(es.store, q)) == want
+
+
+def test_serving_pool_republish_is_atomic():
+    from repro.runtime.serving import OffloadServingPool, Replica
+    pool = OffloadServingPool(
+        replicas=[Replica(0, classes={0}, cycles_per_s=1e8, link_bps=1e7,
+                          runner=lambda ps: ["edge"] * len(ps))],
+        cloud_runner=lambda ps: ["cloud"] * len(ps))
+    reqs = [{"class_id": 1, "cycles": 1e6, "result_bits": 8e3,
+             "payload": i} for i in range(3)]
+    out = pool.admit(reqs, policy="edge_first")
+    assert list(out.assignments) == [-1, -1, -1]     # class 1 not served
+    epoch = pool.republish(0, {0, 1})
+    assert epoch == 1
+    out = pool.admit(reqs, policy="edge_first")
+    assert list(out.assignments) == [0, 0, 0]        # now feasible at edge
+    with pytest.raises(KeyError):
+        pool.republish(99, {0})
