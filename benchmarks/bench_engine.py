@@ -36,6 +36,17 @@ Modes:
                           the number reported is the execute phase's wall
                           clock, best of interleaved repeats.
 
+``--algebra`` adds the SPARQL algebra axis (PR 5): three operator-heavy
+workloads (FILTER-heavy, OPTIONAL-heavy / left-joins, UNION fan-out) run
+through :class:`repro.sparql.endpoint.SparqlEndpoint` on the largest
+sharded store, cold (caches cleared) and warm (repeated texts hit the
+endpoint's version-keyed full-result memo; distinct-but-alpha-equivalent
+sub-BGPs hit the engine's result LRU) —
+``algebra_{filter,optional,union}_{cold,warm}_s{S}`` rows with per-operator
+counters (``bgp_leaves`` / ``filters_applied`` / ``optional_joins`` /
+``union_branches``) in ``derived``. Warm must beat cold: that is the
+cache-reuse contract of compiling algebra onto the batched BGP engine.
+
 ``--rebalance`` adds the placement data-plane axis (PR 4): two identically
 drifted systems rebalance with full re-ship vs delta shipping
 (``rebalance_full_s{S}`` / ``rebalance_delta_s{S}`` — wall clock per
@@ -100,6 +111,10 @@ def main() -> None:
     ap.add_argument("--join", action="store_true",
                     help="join-pipeline axis: shard-local vs global joins "
                          "+ overlapped vs sequential multi-edge rounds")
+    ap.add_argument("--algebra", action="store_true",
+                    help="SPARQL algebra axis: FILTER-heavy / "
+                         "OPTIONAL-heavy / UNION fan-out workloads through "
+                         "SparqlEndpoint, cold vs warm")
     ap.add_argument("--rebalance", action="store_true",
                     help="placement data-plane axis: full re-ship vs delta "
                          "rebalance bytes/wall-clock + sync vs overlapped "
@@ -246,6 +261,56 @@ def main() -> None:
                          f"|batch={len(round_queries)}"
                          f"|mode={mode_seen[name]}{extra}"))
 
+    # ---- SPARQL algebra axis (--algebra) ----------------------------------
+    t_alg: dict[tuple[str, str], float] = {}
+    if args.algebra:
+        from repro.sparql.endpoint import SparqlEndpoint
+        S = max(shard_counts) if shard_counts else None
+        alg_suffix = f"_s{S}" if S else ""
+        store_a = dict(stores)[alg_suffix] if S else g.store
+        n_c = min(8, len(g.class_of["Country"]))
+        workloads = {
+            "filter": [
+                f'SELECT ?x ?c WHERE {{ ?x <country> ?c . ?x <likes> ?p . '
+                f'FILTER (?c != "Country{k}" && REGEX(?c, "Country[0-9]$")) '
+                f'}}' for k in range(n_c)],
+            "optional": [
+                f'SELECT ?x ?g ?rt WHERE {{ ?x <likes> ?p . '
+                f'OPTIONAL {{ ?p <hasGenre> ?g }} . '
+                f'OPTIONAL {{ ?p <retailedBy> ?rt }} . '
+                f'?x <country> ?c . FILTER (?c = "Country{k}") }}'
+                for k in range(n_c)],
+            "union": [
+                f'SELECT ?x ?y WHERE {{ '
+                f'{{ ?x <follows> ?y }} UNION {{ ?x <likes> ?y }} '
+                f'UNION {{ ?x <makesPurchase> ?y }} . '
+                f'?x <country> ?c . FILTER (?c = "Country{k}") }}'
+                for k in range(n_c)],
+        }
+        for name, pool_t in workloads.items():
+            batch_t = [pool_t[i % len(pool_t)] for i in range(args.batch)]
+            ep = SparqlEndpoint(store_a, g.dictionary, backend="numpy")
+
+            def cold():
+                ep.clear_cache()
+                ep.query_many(batch_t)
+            t_c = bench(cold, len(batch_t), args.repeats)
+            ep.query_many(batch_t)               # prime
+            t_w = bench(lambda: ep.query_many(batch_t), len(batch_t),
+                        args.repeats)
+            t_alg[(name, "cold")] = t_c
+            t_alg[(name, "warm")] = t_w
+            s = ep.stats
+            ops = (f"bgp_leaves={s.bgp_leaves}"
+                   f"|filters={s.filters_applied}"
+                   f"|optional_joins={s.optional_joins}"
+                   f"|union_branches={s.union_branches}")
+            rows.append((f"algebra_{name}_cold{alg_suffix}", t_c * 1e6,
+                         f"backend=numpy|workload={name}|{ops}"))
+            rows.append((f"algebra_{name}_warm{alg_suffix}", t_w * 1e6,
+                         f"backend=numpy|workload={name}|cache=hit"
+                         f"|speedup_vs_cold={t_c / t_w:.2f}x"))
+
     # ---- placement data-plane axis (--rebalance) --------------------------
     reb_stats: dict[str, dict] = {}
     if args.rebalance and shard_counts:
@@ -351,6 +416,7 @@ def main() -> None:
                 "repeats": args.repeats,
                 "jax": not args.skip_jax,
                 "join_axis": bool(args.join),
+                "algebra_axis": bool(args.algebra),
                 "rebalance_axis": bool(args.rebalance),
                 "round_edges": (args.round_edges
                                 if args.join or args.rebalance else None),
@@ -380,6 +446,11 @@ def main() -> None:
         assert t_round["process"] < t_round["seq"], (
             f"process-overlapped round ({t_round['process']:.3f}s) should "
             f"beat the sequential round ({t_round['seq']:.3f}s)")
+    if args.algebra:
+        for name in ("filter", "optional", "union"):
+            assert t_alg[(name, "warm")] < t_alg[(name, "cold")], (
+                f"warm algebra batch ({name}) should beat cold — leaf BGPs "
+                f"must resolve from the result cache")
     if args.rebalance and shard_counts:
         assert reb_stats["delta"]["changed"], (
             "drift workload produced no placement changes — the "

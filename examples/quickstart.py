@@ -1,18 +1,24 @@
-"""Quickstart: the full paper pipeline in ~60 lines.
+"""Quickstart: full SPARQL over the cloud-edge system via `SparqlEndpoint`.
 
-Builds a WatDiv-like RDF graph, deploys pattern-induced subgraphs onto 4
-edge servers, schedules a 20-user SPARQL workload with the B&B MINLP solver,
-and compares against the paper's four baselines.
+Builds a WatDiv-like RDF graph, stands up the paper's edge-cloud system (4
+edge servers, 20 end users, B&B MINLP scheduling), and then talks to it
+through the one-object public API: ``SparqlEndpoint`` — SELECT/ASK with
+FILTER, OPTIONAL, UNION, DISTINCT, ORDER BY, LIMIT/OFFSET, all compiled
+onto the shard-parallel BGP engine. Algebra queries are scheduled onto
+edges per BGP leaf: a query runs at an edge iff every *required* leaf's
+pattern is resident there.
+
+(The pre-algebra entry points — ``parse_sparql`` -> ``QueryGraph`` ->
+``QueryEngine.execute`` / ``EdgeCloudSystem.run_round`` — still work as
+thin shims for the Def.-2 BGP subset; new code should use the endpoint.)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
-
+from repro import SparqlEndpoint
 from repro.core.cost import SystemParams
 from repro.edge.system import EdgeCloudSystem
 from repro.rdf.generator import generate_watdiv_like, workload_sparql
-from repro.sparql.query import parse_sparql
 
 
 def main() -> None:
@@ -20,44 +26,66 @@ def main() -> None:
     g = generate_watdiv_like(scale=2.0, seed=0)
     print(f"RDF graph: {g.store}")
 
-    # 2. system: 4 edge servers (0.2 GHz, ~75 Mbps links), 20 end users,
-    #    cloud at 5 Mbps — the paper's §5.1 defaults
+    # 2. a standalone endpoint over the raw store: parse -> algebra ->
+    #    batched engine, no system wiring required
+    ep = SparqlEndpoint(g.store, g.dictionary)
+    tbl = ep.query(
+        'SELECT DISTINCT ?c WHERE { ?x <country> ?c . ?x <likes> ?p . '
+        'FILTER (?c != "Country0") } ORDER BY ?c LIMIT 5')
+    print("countries:", [c for (c,) in tbl.rows()])
+    print("any subgenres?", ep.ask("ASK { ?g <subgenreOf> ?h }"))
+
+    # 3. the edge-cloud system: 4 edge servers (0.2 GHz, ~75 Mbps links),
+    #    20 end users, cloud at 5 Mbps — the paper's §5.1 defaults
     params = SystemParams.synthetic(n_users=20, n_edges=4, seed=1)
     system = EdgeCloudSystem(g.store, g.dictionary, params,
                              storage_budgets=400_000)
-
-    # 3. offline: per-user query history -> pattern-induced subgraphs
     history = [workload_sparql(g, 5, seed=100 + n) for n in range(20)]
-    system.prepare(history)
+    system.prepare(history)       # per-user history -> G[P] on the edges
     for es in system.edges:
         print(f"  ES{es.server_id}: {len(es.index)} resident patterns, "
               f"{es.used_bytes():,} bytes of G[P]")
     print(f"construction: {system.construction_seconds:.3f}s")
 
-    # 4. online: one scheduling round per policy
-    texts = workload_sparql(g, 20, seed=77)
-    queries = [(n, parse_sparql(t, g.dictionary))
-               for n, t in enumerate(texts)]
+    # 4. one endpoint over the whole system (shared engine = one cache
+    #    domain); algebra texts join plain BGPs in the same rounds
+    ep = SparqlEndpoint.from_system(system)
+    texts = workload_sparql(g, 16, seed=77) + [
+        'SELECT ?x ?g WHERE { ?x <likes> ?p . '
+        'OPTIONAL { ?p <hasGenre> ?g } }',
+        'SELECT ?x ?y WHERE { { ?x <follows> ?y } UNION '
+        '{ ?x <likes> ?y } } LIMIT 50',
+        'SELECT DISTINCT ?c WHERE { ?u <country> ?c } ORDER BY ?c',
+        'ASK { ?x <subgenreOf> ?y }',
+    ]
+    pairs = [(n % 20, t) for n, t in enumerate(texts)]
     print(f"\n{'policy':<12} {'objective(s)':>12} {'edge%':>7} "
           f"{'sched(ms)':>10}")
     for policy in ["cloud_only", "random", "edge_first", "greedy", "bnb"]:
-        rep = system.run_round(queries, policy=policy)
+        rep = ep.run_round(pairs, policy=policy, observe=(policy == "bnb"))
         edge_frac = 1.0 - rep.assignment_ratio.get(-1, 0.0)
         print(f"{policy:<12} {rep.objective:>12.3f} {edge_frac:>6.0%} "
               f"{rep.schedule_seconds * 1e3:>10.2f}")
 
-    # 5. dynamic placement: an asynchronous delta-rebalance overlapping the
-    # next round (compute runs on a background thread; the commit waits at
-    # the round's epoch barrier and ships only TripleDelta diffs)
+    # 5. the plan, as the admission layer sees it (cache provenance per
+    #    BGP leaf after the rounds above warmed the engine)
+    print("\n" + ep.explain(texts[-4]))
+
+    # 6. dynamic placement: an asynchronous delta-rebalance overlapping the
+    #    next round picks up the observed OPTIONAL/UNION leaf patterns
     handle = system.rebalance_async()
-    system.run_round(queries, policy="greedy")
+    ep.run_round(pairs, policy="greedy")
     report = handle.join()
-    changes = report.changes
-    print(f"\nrebalance (added, evicted) per ES: {changes}")
+    print(f"\nrebalance (added, evicted) per ES: {report.changes}")
     print(f"epoch {report.epoch}: shipped {report.shipped_bytes}B as deltas"
           f" (full re-ship: {report.full_bytes}B),"
           f" {report.matcher_calls} matcher calls"
           f" ({report.induced_hits} memo hits)")
+    s = ep.stats
+    print(f"engine: {s.queries} BGP executions, {s.bgp_leaves} algebra "
+          f"leaves, {s.filters_applied} filters, {s.optional_joins} "
+          f"left-joins, {s.union_branches} union branches, "
+          f"{s.cache_hits} result-cache hits")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,36 @@ Layers
 - ``repro.kernels``  : Pallas TPU kernels (validated via interpret mode on CPU)
 - ``repro.runtime``  : train/serve loops, checkpointing, fault tolerance
 - ``repro.launch``   : production mesh + multi-pod dry-run drivers
+
+Public query API
+----------------
+:class:`repro.SparqlEndpoint` is the one-object entry point for running
+SPARQL (SELECT/ASK with FILTER, OPTIONAL, UNION, DISTINCT, ORDER BY,
+LIMIT/OFFSET) over any store — see ``repro.sparql.endpoint``. The
+lower-level pieces (``parse_query`` -> ``compile_query`` -> operator tree,
+``SolutionTable`` results) are re-exported here lazily. The pre-algebra
+BGP path (``parse_sparql`` -> ``QueryGraph`` -> ``QueryEngine.execute``)
+remains as a thin deprecation shim for Def.-2 queries.
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+_LAZY = {
+    "SparqlEndpoint": ("repro.sparql.endpoint", "SparqlEndpoint"),
+    "SolutionTable": ("repro.sparql.algebra", "SolutionTable"),
+    "compile_query": ("repro.sparql.algebra", "compile_query"),
+    "parse_query": ("repro.sparql.query", "parse_query"),
+    "parse_sparql": ("repro.sparql.query", "parse_sparql"),
+}
+
+
+def __getattr__(name):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(target[0]), target[1])
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

@@ -144,14 +144,41 @@ def result_bits(res, projection: list[str]) -> float:
     return float(res.result_bytes(projection) * BITS_PER_BYTE)
 
 
-def estimate_query_cost(store: RDFStore, q: QueryGraph,
+def estimate_query_cost(store: RDFStore, q,
                         ) -> tuple[float, float]:
     """(c_n cycles, w_n bits) via join-order cardinality simulation.
 
     Follows Stocker et al. [WWW'08]-style selectivity composition: walk the
     greedy join order, multiplying in per-pattern selectivities; c_n sums the
     estimated intermediate sizes (work), w_n is the final estimate (result).
+
+    ``q`` is a plain :class:`QueryGraph` or a compiled algebra plan
+    (:class:`repro.sparql.algebra.Node`): a plan costs the sum of its BGP
+    leaves' work c_n (every leaf executes) and estimates w_n structurally
+    — UNION **sums** its branches (concatenation grows the result), while
+    join/filter/modifier operators take the largest input (they only
+    combine or drop rows of their inputs).
     """
+    leaves = getattr(q, "bgp_leaves", None)
+    if leaves is not None:
+        from ..sparql.algebra import BGPNode, UnionNode
+        work = 0.0
+
+        def est_w(node) -> float:
+            nonlocal work
+            if isinstance(node, BGPNode):
+                if not node.query.patterns:
+                    return float(BITS_PER_CELL)
+                c_i, w_i = estimate_query_cost(store, node.query)
+                work += c_i - CYCLES_BASE
+                return w_i
+            kids = [est_w(c) for c in node.children()]
+            if not kids:
+                return float(BITS_PER_CELL)
+            return float(sum(kids) if isinstance(node, UnionNode)
+                         else max(kids))
+        w = est_w(q)
+        return float(CYCLES_BASE + work), max(w, float(BITS_PER_CELL))
     from ..sparql.matcher import _order_patterns  # same plan as execution
     order = _order_patterns(store, q)
     bound: set[str] = set()
@@ -191,10 +218,16 @@ def measured_query_cost(store: RDFStore, q: QueryGraph,
     ``engine``: optional :class:`repro.sparql.engine.QueryEngine` — routes
     execution through its backend and result cache, so repeated measurement
     of a hot query (re-costing between scheduling rounds) is a cache hit.
+    ``q`` may be a plain :class:`QueryGraph` or a compiled algebra plan
+    (the latter requires an engine).
     """
     if engine is not None:
-        res = engine.execute(store, q)
+        from ..sparql.algebra import execute_any_batch
+        res = execute_any_batch(store, engine, [q])[0]
     else:
+        from ..sparql.algebra import is_algebra_plan
+        if is_algebra_plan(q):
+            raise ValueError("measuring an algebra plan needs an engine")
         from ..sparql.matcher import match_bgp
         res = match_bgp(store, q)
     n_rows = res.num_matches
@@ -213,9 +246,11 @@ def measured_query_cost_batch(store: RDFStore, queries: list[QueryGraph],
     One ``engine.execute_batch`` call: identical candidate scans across the
     batch run once and alpha-equivalent queries share cached results, which
     is what makes measured (rather than estimated) costs affordable as a
-    scheduler input at serving scale.
+    scheduler input at serving scale. Mixed BGP/algebra batches are
+    supported — every algebra plan's BGP leaves join the same batch.
     """
-    results = engine.execute_batch(store, queries)
+    from ..sparql.algebra import execute_any_batch
+    results = execute_any_batch(store, engine, queries)
     n = np.array([r.num_matches for r in results], dtype=np.int64)
     c = CYCLES_BASE + CYCLES_PER_ROW * np.maximum(n, 1).astype(np.float64)
     w = np.array([result_bits(r, q.projection)

@@ -86,6 +86,54 @@ def pattern_of(q: QueryGraph) -> Pattern:
 
 
 # ---------------------------------------------------------------------------
+# algebra-plan feasibility (per-BGP-leaf patterns)
+# ---------------------------------------------------------------------------
+
+def feasibility_patterns(q) -> list[Pattern] | None:
+    """Patterns whose residency certifies edge executability of ``q``.
+
+    ``q`` is a plain :class:`~repro.sparql.query.QueryGraph` (one pattern —
+    the pre-algebra behavior) or a compiled algebra plan
+    (:class:`repro.sparql.algebra.Node`). For a plan, edge execution is
+    sound iff the union of its **required** BGP leaves is covered by the
+    edge's pattern-induced residency: every required leaf isomorphic to a
+    resident pattern finds its complete match set over G[P] (the paper's
+    completeness guarantee), and FILTER / DISTINCT / ORDER / slice
+    operators only ever combine or drop those rows. OPTIONAL right sides
+    are *excluded from the requirement* — they can only extend solutions,
+    and an edge lacking them under-binds optional columns (the documented
+    relaxation; deploy their patterns too for exact cloud parity).
+
+    Returns ``None`` when edge execution cannot be certified at all: a
+    required leaf is disconnected (no DFS code exists) or the plan has no
+    required leaf with patterns (nothing to anchor residency on).
+    """
+    leaves = getattr(q, "bgp_leaves", None)
+    if leaves is None:
+        return [pattern_of(q)]
+    pats: list[Pattern] = []
+    for leaf in q.bgp_leaves(required_only=True):
+        if not leaf.query.patterns:
+            continue
+        if not leaf.query.is_weakly_connected():
+            return None
+        pats.append(pattern_of(leaf.query))
+    return pats or None
+
+
+def observed_patterns(q) -> list[Pattern]:
+    """Patterns the placement policy should learn from ``q`` — ALL its BGP
+    leaves (OPTIONAL sides included, so dynamic placement can make optional
+    parts resident and restore exact edge/cloud parity), skipping
+    disconnected or empty leaves."""
+    leaves = getattr(q, "bgp_leaves", None)
+    if leaves is None:
+        return [pattern_of(q)]
+    return [pattern_of(leaf.query) for leaf in q.bgp_leaves()
+            if leaf.query.patterns and leaf.query.is_weakly_connected()]
+
+
+# ---------------------------------------------------------------------------
 # minimum DFS code
 # ---------------------------------------------------------------------------
 

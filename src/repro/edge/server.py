@@ -38,9 +38,9 @@ from ..core.placement import DynamicPlacement
 from ..rdf.deltas import (ADD_WIRE_BYTES, TripleDelta, delta_between,
                           rows_at)
 from ..rdf.graph import RDFStore, triples_size_bytes
+from ..sparql.algebra import execute_any_batch
 from ..sparql.engine import QueryEngine
 from ..sparql.matcher import MatchResult
-from ..sparql.query import QueryGraph
 
 
 @dataclass
@@ -59,15 +59,21 @@ class ExecutionRecord:
 
 
 def _execute_batch(store: RDFStore, engine: QueryEngine,
-                   queries: list[QueryGraph],
+                   queries: list,
                    ) -> list[tuple[MatchResult, ExecutionRecord]]:
     """Run one server's batch through the engine; wall time is apportioned
     evenly across the batch (scans/cache are shared, so per-query isolation
-    is not measurable — Eq. 5 accounting only needs the total)."""
+    is not measurable — Eq. 5 accounting only needs the total).
+
+    ``queries`` may mix plain :class:`QueryGraph`\\ s and compiled algebra
+    plans (:mod:`repro.sparql.algebra`): all BGP leaves share ONE engine
+    batch, and an algebra result is a
+    :class:`~repro.sparql.algebra.SolutionTable` (same cost-accounting
+    surface as :class:`MatchResult`)."""
     t0 = time.perf_counter()
-    results = engine.execute_batch(store, queries)
+    results = execute_any_batch(store, engine, queries)
     per_q = (time.perf_counter() - t0) / max(1, len(queries))
-    return [(res, ExecutionRecord.of(res, q.projection, per_q))
+    return [(res, ExecutionRecord.of(res, list(q.projection), per_q))
             for q, res in zip(queries, results)]
 
 
@@ -80,13 +86,10 @@ class CloudServer:
         self.store = store
         self.engine = engine or QueryEngine()
 
-    def execute(self, q: QueryGraph) -> tuple[MatchResult, ExecutionRecord]:
-        t0 = time.perf_counter()
-        res = self.engine.execute(self.store, q)
-        dt = time.perf_counter() - t0
-        return res, ExecutionRecord.of(res, q.projection, dt)
+    def execute(self, q) -> tuple[MatchResult, ExecutionRecord]:
+        return _execute_batch(self.store, self.engine, [q])[0]
 
-    def execute_batch(self, queries: list[QueryGraph],
+    def execute_batch(self, queries: list,
                       ) -> list[tuple[MatchResult, ExecutionRecord]]:
         return _execute_batch(self.store, self.engine, queries)
 
@@ -271,14 +274,11 @@ class EdgeServer:
     def can_execute(self, q_pattern: Pattern) -> bool:
         return bool(self.index.lookup(q_pattern))
 
-    def execute(self, q: QueryGraph) -> tuple[MatchResult, ExecutionRecord]:
+    def execute(self, q) -> tuple[MatchResult, ExecutionRecord]:
         assert self.store is not None, "edge server has no deployed data"
-        t0 = time.perf_counter()
-        res = self.engine.execute(self.store, q)
-        dt = time.perf_counter() - t0
-        return res, ExecutionRecord.of(res, q.projection, dt)
+        return _execute_batch(self.store, self.engine, [q])[0]
 
-    def execute_batch(self, queries: list[QueryGraph],
+    def execute_batch(self, queries: list,
                       ) -> list[tuple[MatchResult, ExecutionRecord]]:
         assert self.store is not None, "edge server has no deployed data"
         return _execute_batch(self.store, self.engine, queries)

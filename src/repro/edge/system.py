@@ -54,13 +54,15 @@ import numpy as np
 
 from ..core.cost import (QueryTasks, SystemParams, estimate_query_cost)
 from ..core.induced import InducedIndex
-from ..core.pattern import Pattern, pattern_of
+from ..core.pattern import (Pattern, feasibility_patterns,
+                            observed_patterns)
 from ..core.placement import PatternProfile, greedy_knapsack
 from ..core.scheduler import ScheduleResult, schedule
 from ..rdf.graph import RDFStore
+from ..sparql.algebra import compile_query
 from ..sparql.engine import QueryEngine
 from ..sparql.matcher import MatchResult
-from ..sparql.query import QueryGraph, parse_sparql
+from ..sparql.query import QueryGraph, parse_query
 from .rebalance import RebalanceHandle, RebalanceManager, RebalanceReport
 from .server import CloudServer, EdgeServer
 
@@ -96,6 +98,22 @@ def _xla_initialized() -> bool:
     return True
 
 
+def _strip_plan_for_ipc(q):
+    """Shallow-copy an algebra plan without its attached ``dictionary`` /
+    ``parsed`` payload: fork-pool workers already hold the system's
+    dictionary copy-on-write, so shipping megabytes of term tables per
+    payload would defeat PR 3's records-only IPC design. The operator
+    tree itself is shared by reference in the copy (read-only)."""
+    from ..sparql.algebra import is_algebra_plan
+    if not is_algebra_plan(q) or getattr(q, "dictionary", None) is None:
+        return q
+    import copy
+    lite = copy.copy(q)
+    lite.dictionary = None
+    lite.parsed = None
+    return lite
+
+
 def _round_worker(task):
     """Pool worker: execute one server's batch, return (k, records, wall).
 
@@ -118,6 +136,9 @@ def _round_worker(task):
     if epoch != _WORKER_EPOCH:
         sys_.engine.clear_cache()
         _WORKER_EPOCH = epoch
+    for q in qs:                 # reattach the fork-shared dictionary to
+        if hasattr(q, "bgp_leaves"):     # plans stripped for the pipe
+            q.dictionary = sys_.dictionary
     server = sys_.cloud if k < 0 else sys_.edges[k]
     t0 = time.perf_counter()
     out = server.execute_batch(qs)
@@ -278,10 +299,11 @@ class EdgeCloudSystem:
         for qs in history_queries:
             pats = []
             for text in qs:
-                q = parse_sparql(text, self.dictionary)
-                p = pattern_of(q)
-                if p.indexable:
-                    pats.append(p)
+                # full-grammar history: every BGP leaf of an algebra query
+                # (OPTIONAL sides included) is a placement candidate
+                plan = compile_query(parse_query(text, self.dictionary),
+                                     self.dictionary)
+                pats += [p for p in observed_patterns(plan) if p.indexable]
             per_user_patterns.append(pats)
 
         with self._placement_lock:
@@ -316,6 +338,13 @@ class EdgeCloudSystem:
                     cost_source: str = "estimate") -> QueryTasks:
         """(c, w, e) for a batch of (user, query) pairs (Eq. 2 via index).
 
+        ``queries`` may mix plain :class:`QueryGraph`\\ s and compiled
+        algebra plans. Feasibility is per-BGP-leaf
+        (:func:`~repro.core.pattern.feasibility_patterns`): an algebra
+        query is edge-executable iff EVERY required leaf's pattern is
+        resident at that edge (OPTIONAL right sides excluded), so the B&B
+        scheduler routes algebra queries exactly like BGPs.
+
         Taken under the placement lock so the feasibility matrix ``e_nk``
         snapshots ONE placement epoch — it can never mix pre- and
         post-rebalance residency across rows.
@@ -327,10 +356,12 @@ class EdgeCloudSystem:
         with self._placement_lock:
             for i, (user, q) in enumerate(queries):
                 c[i], w[i] = estimate_query_cost(self.cloud.store, q)
-                p = pattern_of(q)
+                pats = feasibility_patterns(q)
+                if pats is None:
+                    continue        # nothing certifies edge execution
                 for es in self.edges:
                     if self.params.assoc[user, es.server_id] and \
-                            es.can_execute(p):
+                            all(es.can_execute(p) for p in pats):
                         e[i, es.server_id] = 1.0
         return QueryTasks(c=c, w=w, e=e)
 
@@ -356,12 +387,14 @@ class EdgeCloudSystem:
                                       **sched_kw)
         return tasks, params_batch, sr, time.perf_counter() - t0
 
-    def _observe_pattern(self, user: int, q: QueryGraph) -> None:
-        p = pattern_of(q)
-        if p.indexable:
-            for es in self.edges:
-                if self.params.assoc[user, es.server_id]:
-                    es.placement.observe(p)
+    def _observe_pattern(self, user: int, q) -> None:
+        # algebra plans observe every BGP leaf (OPTIONAL sides included) so
+        # dynamic placement can learn the full shape of the workload
+        for p in observed_patterns(q):
+            if p.indexable:
+                for es in self.edges:
+                    if self.params.assoc[user, es.server_id]:
+                        es.placement.observe(p)
 
     @staticmethod
     def _realized_latency(rec, i: int, k: int, sr: ScheduleResult,
@@ -512,8 +545,8 @@ class EdgeCloudSystem:
                     if mode == "process" else None)
             t_exec = time.perf_counter()
             if pool is not None:
-                payload = [(k, [queries[i][1] for i in idxs],
-                            self._engine_epoch)
+                payload = [(k, [_strip_plan_for_ipc(queries[i][1])
+                                for i in idxs], self._engine_epoch)
                            for k, idxs in by_server.items()]
                 done = pool.map(_round_worker, payload)
             elif mode:

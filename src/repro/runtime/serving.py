@@ -148,17 +148,23 @@ class OffloadServingPool:
 
 
 def make_sparql_runner(store, engine) -> Callable:
-    """Replica runner serving SPARQL BGP payloads through a query engine.
+    """Replica runner serving SPARQL payloads through a query engine.
 
     ``store`` is any :class:`repro.rdf.graph.RDFStore` — a monolithic
     :class:`~repro.rdf.graph.TripleStore` or a
     :class:`~repro.rdf.sharding.ShardedTripleStore` (whose bound-predicate
     scans prune to one shard). ``payload`` items are
-    :class:`repro.sparql.query.QueryGraph`s; the whole per-replica assignment
-    executes as ONE ``engine.execute_batch`` call, so scan dedup, the scan
-    LRU, and the result cache apply across the admission batch — the SPARQL
-    instantiation of this pool's batch-execution contract.
+    :class:`repro.sparql.query.QueryGraph`\\ s and/or compiled algebra
+    plans (:mod:`repro.sparql.algebra` — FILTER/OPTIONAL/UNION/modifiers);
+    the whole per-replica assignment executes as ONE engine batch (every
+    algebra plan's BGP leaves included), so scan dedup, the scan LRU, and
+    the result cache apply across the admission batch — the SPARQL
+    instantiation of this pool's batch-execution contract. Plain payloads
+    yield :class:`~repro.sparql.matcher.MatchResult`\\ s, algebra payloads
+    :class:`~repro.sparql.algebra.SolutionTable`\\ s.
     """
+    from ..sparql.algebra import execute_any_batch
+
     def runner(payloads: list) -> list:
-        return engine.execute_batch(store, list(payloads))
+        return execute_any_batch(store, engine, list(payloads))
     return runner

@@ -1,0 +1,217 @@
+"""`SparqlEndpoint` — the one-object public query API.
+
+Before this layer, running a query meant hand-wiring ``Dictionary`` + store
++ ``QueryEngine`` (+ ``EdgeCloudSystem`` / ``OffloadServingPool``) and
+speaking :class:`~repro.sparql.query.QueryGraph`. The endpoint packages
+that pipeline behind the surface real SPARQL engines expose:
+
+>>> ep = SparqlEndpoint(store, dictionary)          # or .from_system(sys_)
+>>> ep.query('SELECT ?x WHERE { ?x <likes> ?p . FILTER (?p != "P0") }')
+>>> ep.ask('ASK { ?x <subgenreOf> ?y }')
+>>> print(ep.explain(text))                         # plan + cache provenance
+>>> ep.query_many(texts)                            # one engine batch
+
+Everything funnels through :mod:`repro.sparql.algebra`: queries compile to
+operator trees whose BGP leaves run on the shard-parallel batched engine,
+so the scan/plan/result LRUs, backend registry (``numpy`` / ``jax``), and
+sharded stores all apply unchanged. Compiled plans are memoized per query
+text (`plan_cache_size`), making repeated text queries parse-free.
+
+Construction from the edge-cloud stack:
+
+- :meth:`from_system` shares an :class:`~repro.edge.system.EdgeCloudSystem`'s
+  cloud store and engine; :meth:`run_round` then parses per-user query texts
+  and delegates to ``system.run_round_batched`` — algebra queries are
+  B&B-scheduled onto edges via per-leaf pattern feasibility
+  (:func:`repro.core.pattern.feasibility_patterns`) exactly like BGPs.
+- ``pool=`` attaches an :class:`~repro.runtime.serving.OffloadServingPool`
+  whose replicas serve compiled plans through
+  :func:`~repro.runtime.serving.make_sparql_runner`; :meth:`admit_many`
+  builds the admission batch from query texts.
+
+The old entry points (``parse_sparql`` -> ``QueryGraph`` ->
+``QueryEngine.execute``) remain as thin shims for the Def.-2 BGP subset;
+new code should talk to the endpoint.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+from ..rdf.dictionary import Dictionary
+from ..rdf.graph import RDFStore
+from .algebra import (AskNode, Node, SolutionTable, compile_query,
+                      evaluate_many, explain_plan)
+from .engine import EngineStats, QueryEngine
+from .query import ParseError, parse_query
+
+
+class SparqlEndpoint:
+    """Unified SELECT/ASK endpoint over any :class:`RDFStore`.
+
+    ``engine`` (or ``backend``) selects the execution engine; one endpoint
+    may share an engine with a running system (caches are version-keyed
+    and lock-guarded, so this is safe and cache-effective). ``system`` /
+    ``pool`` optionally attach the cloud-edge scheduler and the serving
+    admission layer.
+    """
+
+    def __init__(self, store: RDFStore | None = None,
+                 dictionary: Dictionary | None = None, *,
+                 engine: QueryEngine | None = None,
+                 backend: str = "numpy",
+                 system=None, pool=None,
+                 plan_cache_size: int = 256,
+                 result_cache_size: int = 256,
+                 result_cache_bytes: int = 256 * 1024 * 1024) -> None:
+        if system is not None:
+            store = store if store is not None else system.cloud.store
+            dictionary = (dictionary if dictionary is not None
+                          else system.dictionary)
+            engine = engine if engine is not None else system.engine
+        if store is None or dictionary is None:
+            raise ValueError("SparqlEndpoint needs a store and a dictionary "
+                             "(or system=...)")
+        self.store = store
+        self.dictionary = dictionary
+        self.engine = engine or QueryEngine(backend=backend)
+        self.system = system
+        self.pool = pool
+        self._plans: OrderedDict[str, Node] = OrderedDict()
+        self._plan_cache_size = int(plan_cache_size)
+        # full-query result LRU keyed (text, store.version): the algebra
+        # analogue of the engine's per-BGP result cache — a hot repeated
+        # query skips operator re-evaluation entirely, and the version key
+        # makes entries self-invalidating across placement deltas / ingest
+        # (size 0 disables). Count- AND byte-bounded like the engine's
+        # LRUs: a few huge tables must not pin unbounded memory. Cached
+        # tables are shared — treat as read-only.
+        self._results: OrderedDict[tuple, SolutionTable] = OrderedDict()
+        self._result_cache_size = int(result_cache_size)
+        self._result_cache_bytes = int(result_cache_bytes)
+        self._result_bytes = 0
+
+    # -- parsing / planning --------------------------------------------------
+    def parse(self, text: str) -> Node:
+        """Compile ``text`` to an operator tree (memoized per text)."""
+        plan = self._plans.get(text)
+        if plan is not None:
+            self._plans.move_to_end(text)
+            return plan
+        plan = compile_query(parse_query(text, self.dictionary),
+                             self.dictionary)
+        self._plans[text] = plan
+        while len(self._plans) > self._plan_cache_size:
+            self._plans.popitem(last=False)
+        return plan
+
+    def explain(self, text: str) -> str:
+        """Operator tree + per-BGP-leaf cache-hit provenance and estimated
+        cardinalities against this endpoint's store/engine state."""
+        return explain_plan(self.parse(text), self.store, self.engine)
+
+    # -- execution -----------------------------------------------------------
+    def _run(self, texts: list[str]) -> list[SolutionTable]:
+        """Evaluate query texts with full-result memoization: misses (and
+        in-batch duplicates, once) evaluate as ONE batch, hits return the
+        cached table for the CURRENT store version."""
+        v = self.store.version
+        found: dict[str, SolutionTable] = {}
+        todo: dict[str, Node] = {}
+        for t in texts:
+            if t in found or t in todo:
+                continue
+            hit = self._results.get((t, v))
+            if hit is not None:
+                self._results.move_to_end((t, v))
+                found[t] = hit
+            else:
+                todo[t] = self.parse(t)
+        if todo:
+            tables = evaluate_many(list(todo.values()), self.store,
+                                   self.engine)
+            # answer from the local snapshot — the LRU trim below may evict
+            # entries belonging to a batch wider than the cache
+            found.update(zip(todo, tables))
+            if self._result_cache_size > 0:
+                for t, tbl in zip(todo, tables):
+                    nbytes = int(tbl.bindings.nbytes)
+                    if nbytes > self._result_cache_bytes:
+                        continue       # would evict everything; skip
+                    displaced = self._results.pop((t, v), None)
+                    if displaced is not None:
+                        self._result_bytes -= int(displaced.bindings.nbytes)
+                    self._results[(t, v)] = tbl
+                    self._result_bytes += nbytes
+                while (len(self._results) > self._result_cache_size
+                       or self._result_bytes > self._result_cache_bytes):
+                    _, old = self._results.popitem(last=False)
+                    self._result_bytes -= int(old.bindings.nbytes)
+        return [found[t] for t in texts]
+
+    def clear_cache(self) -> None:
+        """Cold-start: drop the endpoint's result memo AND the engine's
+        scan/plan/result LRUs (compiled plans survive — they are
+        store-independent)."""
+        self._results.clear()
+        self._result_bytes = 0
+        self.engine.clear_cache()
+
+    def query(self, text: str) -> SolutionTable:
+        """Run a SELECT query; returns a decoded-access solution table."""
+        if isinstance(self.parse(text), AskNode):
+            raise ParseError("ASK query — use SparqlEndpoint.ask")
+        return self._run([text])[0]
+
+    def query_many(self, texts: list[str]) -> list[SolutionTable]:
+        """Run many SELECT/ASK queries as ONE engine batch: every BGP leaf
+        of every query prescans/dedups together and alpha-equivalent
+        sub-BGPs share result-cache entries; repeated texts hit the
+        endpoint's full-result memo."""
+        return self._run(texts)
+
+    def ask(self, text: str) -> bool:
+        """Run an ASK query (a SELECT is accepted too: non-empty result)."""
+        return self._run([text])[0].num_matches > 0
+
+    @property
+    def stats(self) -> EngineStats:
+        return self.engine.stats
+
+    # -- cloud-edge / serving integration -------------------------------------
+    @classmethod
+    def from_system(cls, system, **kw) -> "SparqlEndpoint":
+        """Endpoint sharing an :class:`~repro.edge.system.EdgeCloudSystem`'s
+        cloud store, dictionary, and engine (one cache domain)."""
+        return cls(system=system, **kw)
+
+    def run_round(self, user_texts: list[tuple[int, str]],
+                  policy: str = "bnb", **kw):
+        """Parse per-user query texts and run one scheduling round through
+        ``system.run_round_batched`` — algebra queries route to edges
+        whenever every *required* BGP leaf's pattern is resident there."""
+        if self.system is None:
+            raise ValueError("endpoint has no EdgeCloudSystem attached")
+        queries = [(user, self.parse(text)) for user, text in user_texts]
+        return self.system.run_round_batched(queries, policy=policy, **kw)
+
+    def admit_many(self, texts: list[str], class_of=None,
+                   policy: str = "bnb", **kw):
+        """Build and admit one serving batch from query texts through the
+        attached :class:`~repro.runtime.serving.OffloadServingPool`.
+
+        ``class_of``: optional ``plan -> int`` request classifier (default:
+        every request is class 0). Cycles/result-bits come from the cost
+        estimator over the plan's BGP leaves.
+        """
+        if self.pool is None:
+            raise ValueError("endpoint has no OffloadServingPool attached")
+        from ..core.cost import estimate_query_cost
+        requests = []
+        for t in texts:
+            plan = self.parse(t)
+            c, w = estimate_query_cost(self.store, plan)
+            requests.append({
+                "class_id": int(class_of(plan)) if class_of else 0,
+                "cycles": c, "result_bits": w, "payload": plan})
+        return self.pool.admit(requests, policy=policy, **kw)

@@ -85,6 +85,13 @@ Semantics: identical to per-query :func:`repro.sparql.matcher.match_bgp` —
 solution multisets are equal on every backend and store kind, asserted
 against the oracle in ``tests/test_engine.py`` / ``tests/test_sharding.py``
 / ``tests/test_join_pipeline.py``.
+
+**Layering.** This engine executes BGPs only. The SPARQL algebra layer
+(:mod:`repro.sparql.algebra`, surfaced by
+:class:`repro.sparql.endpoint.SparqlEndpoint`) sits on top: operator trees
+whose BGP leaves are batched through :meth:`QueryEngine.execute_batch`, so
+every cache and backend here serves full SELECT/ASK queries unchanged.
+``QueryEngine.execute(QueryGraph)`` remains the thin BGP-subset shim.
 """
 
 from __future__ import annotations
@@ -428,6 +435,14 @@ class EngineStats:
     (whole ``execute_batch`` calls, summed across overlapped threads).
     ``join`` aggregates the :class:`~repro.sparql.matcher.JoinStats`
     pipeline counters.
+
+    Per-operator algebra counters (incremented by
+    :mod:`repro.sparql.algebra` through :meth:`QueryEngine.bump_stats`):
+    ``bgp_leaves`` — BGP leaves executed through this engine on behalf of
+    algebra plans (each also counts once in ``queries``);
+    ``filters_applied`` / ``optional_joins`` — FILTER / OPTIONAL
+    (left-join) operator applications; ``union_branches`` — branches
+    fed into UNION concatenations.
     """
 
     queries: int = 0
@@ -444,6 +459,10 @@ class EngineStats:
     prescan_seconds: float = 0.0
     join_seconds: float = 0.0
     join: JoinStats = field(default_factory=JoinStats)
+    bgp_leaves: int = 0
+    filters_applied: int = 0
+    optional_joins: int = 0
+    union_branches: int = 0
 
     @property
     def scans_deduped(self) -> int:
@@ -496,6 +515,38 @@ class QueryEngine:
         # guards caches + stats when one engine serves overlapped server
         # batches from multiple threads; the matcher hot path runs unlocked
         self._lock = threading.RLock()
+
+    def cache_probe(self, store: RDFStore, q: QueryGraph) -> dict:
+        """Non-mutating cache provenance for one BGP: would this query hit
+        the result cache, and how many of its planned candidate scans sit
+        in the scan LRU? Counters are NOT incremented — this is the
+        read-only surface ``explain`` (:func:`repro.sparql.algebra.
+        explain_plan`) builds on, keeping the cache representation private
+        to this module.
+
+        Returns ``{"result_cached": bool, "scans_cached": int,
+        "scans_total": int}``.
+        """
+        ck, _ = query_key(q)
+        with self._lock:
+            hit = (store.version, ck) in self._cache
+        plan = plan_bgp(store, q, shard_local=self.shard_local_joins)
+        scannable = [q.patterns[st.pattern] for st in plan if st.needs_scan]
+        cached = 0
+        for tp in scannable:
+            key, _off = self._scan_entry(store, tp, scan_key(tp))
+            with self._lock:
+                cached += key in self._scan_cache
+        return {"result_cached": hit, "scans_cached": cached,
+                "scans_total": len(scannable)}
+
+    def bump_stats(self, **counters: int) -> None:
+        """Thread-safely increment :class:`EngineStats` integer counters —
+        how the algebra evaluator (:mod:`repro.sparql.algebra`) reports
+        per-operator counts into the shared engine stats."""
+        with self._lock:
+            for name, n in counters.items():
+                setattr(self.stats, name, getattr(self.stats, name) + n)
 
     # -- cache ---------------------------------------------------------------
     def clear_cache(self) -> None:

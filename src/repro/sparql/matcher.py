@@ -3,6 +3,10 @@
 This is the query engine that runs on both the cloud and the edge servers
 (the paper uses Neptune / gStore; see DESIGN.md §3 for why we re-express
 matching as data-parallel binding-table joins for a TPU-native system).
+In the full-SPARQL stack this matcher is the **leaf executor**: the
+algebra layer (:mod:`repro.sparql.algebra`) compiles FILTER / OPTIONAL /
+UNION / modifier queries to operator trees whose BGP leaves each run one
+:func:`match_bgp` through the batched engine.
 
 Algorithm: greedy selectivity-ordered left-deep join, planned by
 :func:`plan_bgp`:
