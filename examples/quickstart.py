@@ -15,7 +15,12 @@ thin shims for the Def.-2 BGP subset; new code should use the endpoint.)
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro import SparqlEndpoint
+import json
+import threading
+import urllib.request
+from urllib.parse import quote
+
+from repro import SparqlEndpoint, SparqlHttpServer
 from repro.core.cost import SystemParams
 from repro.edge.system import EdgeCloudSystem
 from repro.rdf.generator import generate_watdiv_like, workload_sparql
@@ -86,6 +91,28 @@ def main() -> None:
           f"leaves, {s.filters_applied} filters, {s.optional_joins} "
           f"left-joins, {s.union_branches} union branches, "
           f"{s.cache_hits} result-cache hits")
+
+    # 7. serving: the SPARQL-Protocol HTTP front end. Concurrent clients
+    #    coalesce inside a 2ms admission window into ONE engine batch
+    #    (W3C JSON results; 503+Retry-After on a full queue, 504 on
+    #    missed deadlines — see examples/serve_offload.py for more)
+    served = texts[-3:]                      # UNION / DISTINCT / ASK
+    replies = [None] * 12
+    with SparqlHttpServer(ep, window_s=0.002, max_batch=64) as srv:
+        def client(j: int) -> None:
+            url = srv.url + "/sparql?query=" + quote(served[j % 3])
+            with urllib.request.urlopen(url) as r:
+                replies[j] = json.loads(r.read())
+        threads = [threading.Thread(target=client, args=(j,))
+                   for j in range(len(replies))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        adm = srv.stats_dict()["admission"]
+    print(f"\nHTTP: {len(replies)} concurrent clients -> {adm['batches']} "
+          f"engine batches (mean batch {adm['mean_batch_size']:.1f}); "
+          f"ASK over HTTP: {replies[2]['boolean']}")
 
 
 if __name__ == "__main__":

@@ -24,6 +24,13 @@ lower-level pieces (``parse_query`` -> ``compile_query`` -> operator tree,
 ``SolutionTable`` results) are re-exported here lazily. The pre-algebra
 BGP path (``parse_sparql`` -> ``QueryGraph`` -> ``QueryEngine.execute``)
 remains as a thin deprecation shim for Def.-2 queries.
+
+Serving
+-------
+:class:`repro.SparqlHttpServer` (``repro.runtime.http``) exposes an
+endpoint over HTTP (SPARQL-Protocol subset, W3C JSON results) with
+:class:`repro.AdmissionQueue` micro-batch coalescing in front — concurrent
+requests execute as ONE engine batch.
 """
 
 __version__ = "1.1.0"
@@ -34,6 +41,8 @@ _LAZY = {
     "compile_query": ("repro.sparql.algebra", "compile_query"),
     "parse_query": ("repro.sparql.query", "parse_query"),
     "parse_sparql": ("repro.sparql.query", "parse_sparql"),
+    "AdmissionQueue": ("repro.runtime.admission", "AdmissionQueue"),
+    "SparqlHttpServer": ("repro.runtime.http", "SparqlHttpServer"),
 }
 
 

@@ -169,6 +169,10 @@ class RoundReport:
     # per-server batch wall clock (-1 cloud, k per edge); in an overlapped
     # round these overlap each other, so their sum exceeds the phase wall
     server_wall_seconds: dict[int, float] = field(default_factory=dict)
+    # per-query match results aligned with ``outcomes`` — populated only by
+    # ``run_round_batched(collect_results=True)`` (the serving front end
+    # needs the bindings, not just the accounting records)
+    results: list | None = None
 
     @property
     def total_modeled_latency(self) -> float:
@@ -463,6 +467,7 @@ class EdgeCloudSystem:
                           observe: bool = True,
                           overlap: bool | str = False,
                           max_workers: int | None = None,
+                          collect_results: bool = False,
                           **sched_kw) -> RoundReport:
         """One scheduling round where each server executes its assignment as
         ONE batch through the shared :class:`QueryEngine` (scan dedup +
@@ -488,16 +493,23 @@ class EdgeCloudSystem:
         ``tests/test_join_pipeline.py``); only the round's
         ``execute_wall_seconds`` shrinks.
 
+        ``collect_results=True`` additionally returns each query's match
+        result (``RoundReport.results``, aligned with ``outcomes``) — the
+        serving front end reads the bindings, not just the accounting
+        records. Process-mode overlap ships only the tiny records back
+        over the pipe by design, so ``collect_results`` downgrades
+        ``overlap="process"`` to thread overlap.
+
         Like :meth:`run_round`, the whole round runs under the placement
         lock (the rebalance epoch barrier).
         """
         with self._placement_lock:
             return self._run_round_batched_locked(
                 queries, policy, execute, observe, overlap, max_workers,
-                sched_kw)
+                collect_results, sched_kw)
 
     def _run_round_batched_locked(self, queries, policy, execute, observe,
-                                  overlap, max_workers,
+                                  overlap, max_workers, collect_results,
                                   sched_kw) -> RoundReport:
         tasks, params_batch, sr, sched_dt = self._schedule_round(
             queries, policy, sched_kw)
@@ -516,13 +528,18 @@ class EdgeCloudSystem:
         if mode == "process":
             import multiprocessing as mp
             if (self.engine.backend.name == "jax" or _xla_initialized()
-                    or "fork" not in mp.get_all_start_methods()):
+                    or "fork" not in mp.get_all_start_methods()
+                    or collect_results):
                 # forking with live XLA runtime threads (this engine's or
                 # ANY prior jax use in this process) risks a child
-                # deadlock; spawn-only platforms have no fork at all
+                # deadlock; spawn-only platforms have no fork at all; and
+                # the fork pool ships records only — results can't come
+                # back over the pipe
                 mode = "thread"
 
         records: list = [None] * len(queries)
+        results: list | None = ([None] * len(queries) if collect_results
+                                else None)
         server_wall: dict[int, float] = {}
         exec_wall = 0.0
         if execute:
@@ -535,7 +552,11 @@ class EdgeCloudSystem:
                 server = self.cloud if k < 0 else self.edges[k]
                 t0 = time.perf_counter()
                 out = server.execute_batch(batch)
-                return k, [rec for _, rec in out], time.perf_counter() - t0
+                dt = time.perf_counter() - t0
+                if collect_results:
+                    for i, (res, _) in zip(idxs, out):
+                        results[i] = res
+                return k, [rec for _, rec in out], dt
 
             if len(by_server) <= 1:
                 mode = ""            # nothing to overlap: report truthfully
@@ -591,7 +612,8 @@ class EdgeCloudSystem:
                            overlapped=bool(mode and execute),
                            overlap_mode=mode if execute else "",
                            execute_wall_seconds=exec_wall,
-                           server_wall_seconds=server_wall)
+                           server_wall_seconds=server_wall,
+                           results=results)
 
     def rebalance_all(self, use_deltas: bool = True,
                       ) -> dict[int, tuple[int, int]]:

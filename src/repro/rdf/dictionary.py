@@ -25,6 +25,7 @@ class Dictionary:
         self._id2ent: list[str] = []
         self._pred2id: dict[str, int] = {}
         self._id2pred: list[str] = []
+        self._version = 0
 
     # -- encoding ----------------------------------------------------------
     def add_entity(self, term: str) -> int:
@@ -33,6 +34,7 @@ class Dictionary:
             eid = len(self._id2ent)
             self._ent2id[term] = eid
             self._id2ent.append(term)
+            self._version += 1
         return eid
 
     def add_predicate(self, term: str) -> int:
@@ -41,7 +43,20 @@ class Dictionary:
             pid = len(self._id2pred)
             self._pred2id[term] = pid
             self._id2pred.append(term)
+            self._version += 1
         return pid
+
+    @property
+    def version(self) -> int:
+        """Monotone token bumped whenever a NEW term is added.
+
+        Compiled query plans bake dictionary ids in (triple constants,
+        FILTER-operand ``ent_id`` / ``pred_id``), so anything memoizing a
+        plan must key on this alongside the query text — a term unknown at
+        compile time may exist after live ingest grows the dictionary
+        (:class:`repro.sparql.endpoint.SparqlEndpoint` does exactly this).
+        """
+        return self._version
 
     # -- lookup ------------------------------------------------------------
     def entity_id(self, term: str) -> int:

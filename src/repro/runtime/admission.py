@@ -1,0 +1,368 @@
+"""Micro-batch admission queue — the concurrency front end of the endpoint.
+
+The engine's whole advantage is batching: `SparqlEndpoint.query_many`
+dedups repeated texts, prescans every BGP leaf of the batch together, and
+lets alpha-equivalent sub-BGPs share result-cache entries. A network front
+end that forwards each arriving request one at a time throws all of that
+away. :class:`AdmissionQueue` restores it for concurrent traffic:
+
+- ``submit(text)`` parses eagerly (syntax errors are rejected before they
+  occupy a queue slot), enqueues a :class:`Ticket`, and wakes the
+  dispatcher. The caller blocks on ``ticket.result()``.
+- The dispatcher opens a **micro-batch window** at the first arrival: it
+  sleeps until ``first_arrival + window_s`` (or until ``max_batch``
+  tickets queued), then drains up to ``max_batch`` tickets, drops the ones
+  whose deadline already passed (they fail with :class:`DeadlineExceeded`
+  — a query that can't make its deadline must not occupy engine time),
+  and executes the survivors as ONE engine batch.
+- The queue is bounded: when ``max_queue`` tickets are waiting, ``submit``
+  raises :class:`AdmissionFullError` carrying a suggested retry delay —
+  the HTTP layer maps it to ``503 + Retry-After``. Backpressure beats an
+  unbounded queue whose tail latency grows without limit.
+
+``window_s=0.0, max_batch=1`` degenerates to sequential per-request
+dispatch — the baseline mode of ``benchmarks/bench_serving.py``.
+
+Execution modes (``mode=``):
+
+- ``"endpoint"`` (default): ``endpoint.query_many`` — one engine batch.
+- ``"round"``: ``endpoint.run_round(..., collect_results=True)`` — the
+  batch is B&B-scheduled across the attached system's edge servers.
+- ``"pool"``: ``endpoint.admit_many`` through the attached
+  :class:`~repro.runtime.serving.OffloadServingPool`.
+
+Per-batch provenance lands in :class:`BatchStats` (queue depth at close,
+window fill, coalesced size, endpoint-memo and engine-cache hit deltas);
+:class:`AdmissionStats` aggregates across the queue's lifetime — both feed
+``bench_serving`` and the HTTP ``/stats`` route.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+
+class AdmissionError(Exception):
+    """Base class for admission-layer failures."""
+
+
+class AdmissionFullError(AdmissionError):
+    """Queue at capacity — back off and retry (HTTP 503)."""
+
+    def __init__(self, retry_after_s: float) -> None:
+        super().__init__(f"admission queue full; retry after "
+                         f"{retry_after_s:.3f}s")
+        self.retry_after_s = retry_after_s
+
+
+class DeadlineExceeded(AdmissionError):
+    """Ticket deadline passed before its batch dispatched (HTTP 504)."""
+
+
+class AdmissionClosed(AdmissionError):
+    """Queue closed while the ticket was pending."""
+
+
+class Ticket:
+    """One admitted query: a thread-safe future the submitter blocks on."""
+
+    __slots__ = ("text", "user", "enqueued_at", "deadline",
+                 "_event", "_value", "_error", "batch_seq")
+
+    def __init__(self, text: str, user: int,
+                 enqueued_at: float, deadline: float | None) -> None:
+        self.text = text
+        self.user = user
+        self.enqueued_at = enqueued_at
+        self.deadline = deadline            # monotonic seconds, or None
+        self._event = threading.Event()
+        self._value = None
+        self._error: BaseException | None = None
+        self.batch_seq: int | None = None   # which batch served it
+
+    def _resolve(self, value) -> None:
+        self._value = value
+        self._event.set()
+
+    def _reject(self, error: BaseException) -> None:
+        self._error = error
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None):
+        """Block until served; raises the stored error on failure."""
+        if not self._event.wait(timeout):
+            raise TimeoutError("ticket not served within timeout")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+@dataclass
+class BatchStats:
+    """Provenance of one dispatched micro-batch."""
+
+    seq: int                      # batch sequence number
+    size: int                     # tickets executed
+    unique_texts: int             # distinct query texts in the batch
+    expired: int                  # tickets dropped at dispatch (deadline)
+    queue_depth: int              # tickets still waiting after the drain
+    window_fill: float            # size / max_batch
+    wait_seconds: float           # mean enqueue -> dispatch wait
+    exec_seconds: float           # engine batch wall clock
+    memo_hits: int                # endpoint full-result memo hits (delta)
+    engine_cache_hits: int        # engine result-cache hits (delta)
+    scans_deduped: int            # engine scan dedups (delta)
+
+
+@dataclass
+class AdmissionStats:
+    """Lifetime aggregates across all batches."""
+
+    submitted: int = 0
+    completed: int = 0
+    rejected: int = 0             # queue-full refusals
+    expired: int = 0              # deadline drops
+    failed: int = 0               # engine errors
+    batches: int = 0
+    max_coalesced: int = 0        # largest batch dispatched
+    recent: list = field(default_factory=list)   # last BatchStats
+
+    @property
+    def mean_batch_size(self) -> float:
+        served = self.completed + self.failed
+        return served / self.batches if self.batches else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "submitted": self.submitted, "completed": self.completed,
+            "rejected": self.rejected, "expired": self.expired,
+            "failed": self.failed, "batches": self.batches,
+            "max_coalesced": self.max_coalesced,
+            "mean_batch_size": round(self.mean_batch_size, 3),
+        }
+
+
+_RECENT_BATCHES = 64              # BatchStats ring kept for /stats
+
+
+class AdmissionQueue:
+    """Bounded micro-batch admission in front of a `SparqlEndpoint`.
+
+    Parameters
+    ----------
+    endpoint : SparqlEndpoint
+    window_s : float
+        Micro-batch window: the dispatcher waits this long after the FIRST
+        arrival before draining, so concurrently arriving queries coalesce.
+        ``0.0`` dispatches immediately (with ``max_batch=1``: sequential).
+    max_batch : int
+        Hard cap per dispatched batch; a full window closes early.
+    max_queue : int
+        Bound on waiting tickets; beyond it ``submit`` raises
+        :class:`AdmissionFullError` (HTTP 503 + Retry-After).
+    default_timeout_s : float | None
+        Per-query deadline applied when the submitter gives none; ``None``
+        disables deadlines by default.
+    mode : str
+        ``"endpoint"`` | ``"round"`` | ``"pool"`` (see module docstring).
+    mode_kw : dict | None
+        Extra keyword arguments forwarded to the mode's dispatch call
+        (``run_round`` / ``admit_many``) — e.g. ``{"policy": "greedy"}``
+        to cap scheduling cost on large coalesced batches (B&B placement
+        is exponential in batch size). Ignored by ``mode="endpoint"``.
+    retry_after_s : float
+        Suggested client back-off carried by :class:`AdmissionFullError`.
+    """
+
+    def __init__(self, endpoint, *, window_s: float = 0.002,
+                 max_batch: int = 64, max_queue: int = 1024,
+                 default_timeout_s: float | None = None,
+                 mode: str = "endpoint",
+                 mode_kw: dict | None = None,
+                 retry_after_s: float = 0.05) -> None:
+        if mode not in ("endpoint", "round", "pool"):
+            raise ValueError(f"unknown admission mode {mode!r}")
+        if mode == "round" and endpoint.system is None:
+            raise ValueError("mode='round' needs an endpoint with a "
+                             "system attached")
+        if mode == "pool" and endpoint.pool is None:
+            raise ValueError("mode='pool' needs an endpoint with a "
+                             "pool attached")
+        self.endpoint = endpoint
+        self.window_s = float(window_s)
+        self.max_batch = int(max_batch)
+        self.max_queue = int(max_queue)
+        self.default_timeout_s = default_timeout_s
+        self.mode = mode
+        self.mode_kw = dict(mode_kw or {})
+        self.retry_after_s = float(retry_after_s)
+        self.stats = AdmissionStats()
+        self._queue: list[Ticket] = []
+        self._cond = threading.Condition()
+        self._closed = False
+        self._seq = 0
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="admission-dispatcher",
+            daemon=True)
+        self._dispatcher.start()
+
+    # -- client side ---------------------------------------------------------
+    def submit(self, text: str, *, user: int = 0,
+               timeout_s: float | None = None) -> Ticket:
+        """Admit one query; returns a :class:`Ticket` to block on.
+
+        Parses eagerly: a syntactically invalid query raises
+        :class:`~repro.sparql.query.ParseError` HERE, before the query
+        occupies a queue slot (and the compiled plan is memoized, so the
+        dispatcher's later parse is free).
+        """
+        self.endpoint.parse(text)           # raises ParseError on bad text
+        now = time.monotonic()
+        timeout = timeout_s if timeout_s is not None else \
+            self.default_timeout_s
+        deadline = (now + timeout) if timeout is not None else None
+        ticket = Ticket(text, user, now, deadline)
+        with self._cond:
+            if self._closed:
+                raise AdmissionClosed("admission queue is closed")
+            if len(self._queue) >= self.max_queue:
+                self.stats.rejected += 1
+                raise AdmissionFullError(self.retry_after_s)
+            self._queue.append(ticket)
+            self.stats.submitted += 1
+            self._cond.notify_all()
+        return ticket
+
+    def query(self, text: str, *, user: int = 0,
+              timeout_s: float | None = None):
+        """Submit + block: the synchronous convenience wrapper."""
+        return self.submit(text, user=user, timeout_s=timeout_s).result()
+
+    @property
+    def depth(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    def close(self, drain: bool = True, timeout: float = 10.0) -> None:
+        """Stop admitting. ``drain=True`` serves already-queued tickets
+        first; ``drain=False`` rejects them with :class:`AdmissionClosed`.
+        """
+        with self._cond:
+            if self._closed:
+                return
+            self._closed = True
+            if not drain:
+                for t in self._queue:
+                    t._reject(AdmissionClosed("queue closed"))
+                self._queue.clear()
+            self._cond.notify_all()
+        self._dispatcher.join(timeout)
+
+    def __enter__(self) -> "AdmissionQueue":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- dispatcher side -----------------------------------------------------
+    def _dispatch_loop(self) -> None:
+        while True:
+            batch = self._collect_batch()
+            if batch is None:
+                return
+            if batch:
+                self._execute_batch(batch)
+
+    def _collect_batch(self) -> list[Ticket] | None:
+        """Block for the first arrival, hold the window open, drain.
+
+        Returns ``None`` when the queue is closed and fully drained (the
+        dispatcher exits), ``[]`` when every drained ticket had expired.
+        """
+        with self._cond:
+            while not self._queue:
+                if self._closed:
+                    return None
+                self._cond.wait()
+            # window opens at the FIRST waiting arrival; closing early on
+            # a full window keeps worst-case wait at window_s even under
+            # burst arrival
+            window_end = self._queue[0].enqueued_at + self.window_s
+            while (len(self._queue) < self.max_batch
+                   and not self._closed):
+                remaining = window_end - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cond.wait(remaining)
+                if not self._queue:       # spurious wake after a drain
+                    return []
+            batch = self._queue[:self.max_batch]
+            del self._queue[:len(batch)]
+            self._depth_after_drain = len(self._queue)
+        # deadline enforcement AT dispatch: expired tickets never reach
+        # the engine (and never pollute a batch's wall clock)
+        now = time.monotonic()
+        live, expired = [], []
+        for t in batch:
+            if t.deadline is not None and now > t.deadline:
+                expired.append(t)
+            else:
+                live.append(t)
+        for t in expired:
+            t._reject(DeadlineExceeded(
+                f"deadline passed {now - t.deadline:.4f}s before dispatch"))
+        self.stats.expired += len(expired)
+        self._expired_last = len(expired)
+        return live
+
+    def _execute_batch(self, batch: list[Ticket]) -> None:
+        ep = self.endpoint
+        texts = [t.text for t in batch]
+        seq = self._seq
+        self._seq += 1
+        memo0 = ep.memo_hits
+        hits0 = ep.stats.cache_hits
+        dedup0 = ep.stats.scans_deduped
+        t0 = time.monotonic()
+        try:
+            if self.mode == "round":
+                report = ep.run_round([(t.user, t.text) for t in batch],
+                                      collect_results=True,
+                                      **self.mode_kw)
+                tables = report.results
+            elif self.mode == "pool":
+                served = ep.admit_many(texts, **self.mode_kw)
+                tables = served.responses
+            else:
+                tables = ep.query_many(texts)
+        except Exception as err:               # engine-level failure:
+            for t in batch:                    # fail the whole batch
+                t._reject(err)
+            self.stats.failed += len(batch)
+            return
+        dt = time.monotonic() - t0
+        for ticket, table in zip(batch, tables):
+            ticket.batch_seq = seq
+            ticket._resolve(table)
+        self.stats.completed += len(batch)
+        self.stats.batches += 1
+        self.stats.max_coalesced = max(self.stats.max_coalesced,
+                                       len(batch))
+        bs = BatchStats(
+            seq=seq, size=len(batch), unique_texts=len(set(texts)),
+            expired=getattr(self, "_expired_last", 0),
+            queue_depth=getattr(self, "_depth_after_drain", 0),
+            window_fill=len(batch) / self.max_batch,
+            wait_seconds=(t0 - sum(t.enqueued_at for t in batch)
+                          / len(batch)),
+            exec_seconds=dt,
+            memo_hits=ep.memo_hits - memo0,
+            engine_cache_hits=ep.stats.cache_hits - hits0,
+            scans_deduped=ep.stats.scans_deduped - dedup0)
+        self.stats.recent.append(bs)
+        del self.stats.recent[:-_RECENT_BATCHES]

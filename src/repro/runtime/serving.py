@@ -123,6 +123,14 @@ class OffloadServingPool:
 
         responses: list = [None] * N
         if execute:
+            # a replica with no runner cannot execute anything: route its
+            # requests to the cloud *and say so* — assignments must report
+            # the placement that actually ran, or the Eq. 5 objective and
+            # the executed placement disagree (execute=False keeps the raw
+            # scheduler output for simulation studies)
+            for j in range(K):
+                if runners[j] is None:
+                    assign[assign == j] = -1
             groups = []
             for j in list(range(K)) + [-1]:
                 idx = np.flatnonzero(assign == j)
@@ -130,8 +138,7 @@ class OffloadServingPool:
                     groups.append((j, idx))
 
             def run_group(j: int, idx: np.ndarray):
-                runner = (self.cloud_runner if j < 0
-                          else (runners[j] or self.cloud_runner))
+                runner = self.cloud_runner if j < 0 else runners[j]
                 return idx, runner([requests[i]["payload"] for i in idx])
 
             if overlap:

@@ -36,6 +36,7 @@ new code should talk to the endpoint.
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 
 from ..rdf.dictionary import Dictionary
@@ -77,8 +78,21 @@ class SparqlEndpoint:
         self.engine = engine or QueryEngine(backend=backend)
         self.system = system
         self.pool = pool
-        self._plans: OrderedDict[str, Node] = OrderedDict()
+        # plan memo keyed (text, dictionary.version): compiled plans bake
+        # dictionary ids in (triple constants, FILTER-operand ent_id /
+        # pred_id), so a plan compiled before live ingest grew the
+        # dictionary may hold stale/missing ids — growth invalidates
+        self._plans: OrderedDict[tuple, Node] = OrderedDict()
         self._plan_cache_size = int(plan_cache_size)
+        # guards the plan memo, the result memo, and the memo counters: the
+        # serving layer (repro.runtime.http / .admission) drives one
+        # endpoint from many threads
+        self._memo_lock = threading.Lock()
+        # full-result memo provenance, read by the admission layer's
+        # per-batch stats (engine cache counters don't see memo hits —
+        # a memo hit never reaches the engine)
+        self.memo_hits = 0
+        self.memo_misses = 0
         # full-query result LRU keyed (text, store.version): the algebra
         # analogue of the engine's per-BGP result cache — a hot repeated
         # query skips operator re-evaluation entirely, and the version key
@@ -93,16 +107,25 @@ class SparqlEndpoint:
 
     # -- parsing / planning --------------------------------------------------
     def parse(self, text: str) -> Node:
-        """Compile ``text`` to an operator tree (memoized per text)."""
-        plan = self._plans.get(text)
-        if plan is not None:
-            self._plans.move_to_end(text)
-            return plan
+        """Compile ``text`` to an operator tree.
+
+        Memoized per ``(text, dictionary.version)``: ids are baked into the
+        plan at compile time, so when live ingest adds terms the memo
+        self-invalidates instead of serving a plan with stale/missing ids
+        (regression-tested in ``tests/test_serving_http.py``).
+        """
+        key = (text, self.dictionary.version)
+        with self._memo_lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self._plans.move_to_end(key)
+                return plan
         plan = compile_query(parse_query(text, self.dictionary),
                              self.dictionary)
-        self._plans[text] = plan
-        while len(self._plans) > self._plan_cache_size:
-            self._plans.popitem(last=False)
+        with self._memo_lock:
+            self._plans[key] = plan
+            while len(self._plans) > self._plan_cache_size:
+                self._plans.popitem(last=False)
         return plan
 
     def explain(self, text: str) -> str:
@@ -114,18 +137,31 @@ class SparqlEndpoint:
     def _run(self, texts: list[str]) -> list[SolutionTable]:
         """Evaluate query texts with full-result memoization: misses (and
         in-batch duplicates, once) evaluate as ONE batch, hits return the
-        cached table for the CURRENT store version."""
+        cached table for the CURRENT store version.
+
+        The store version is snapshotted at dispatch and re-validated after
+        evaluation: if a concurrent delta (live ingest / rebalance commit)
+        moved it mid-batch, the freshly computed tables are returned but
+        NOT cached — they were not computed at any single version the memo
+        key could honestly claim (regression-tested in
+        ``tests/test_serving_http.py``).
+        """
         v = self.store.version
         found: dict[str, SolutionTable] = {}
         todo: dict[str, Node] = {}
         for t in texts:
             if t in found or t in todo:
                 continue
-            hit = self._results.get((t, v))
+            with self._memo_lock:
+                hit = self._results.get((t, v))
+                if hit is not None:
+                    self._results.move_to_end((t, v))
+                    self.memo_hits += 1
             if hit is not None:
-                self._results.move_to_end((t, v))
                 found[t] = hit
             else:
+                with self._memo_lock:
+                    self.memo_misses += 1
                 todo[t] = self.parse(t)
         if todo:
             tables = evaluate_many(list(todo.values()), self.store,
@@ -133,28 +169,31 @@ class SparqlEndpoint:
             # answer from the local snapshot — the LRU trim below may evict
             # entries belonging to a batch wider than the cache
             found.update(zip(todo, tables))
-            if self._result_cache_size > 0:
-                for t, tbl in zip(todo, tables):
-                    nbytes = int(tbl.bindings.nbytes)
-                    if nbytes > self._result_cache_bytes:
-                        continue       # would evict everything; skip
-                    displaced = self._results.pop((t, v), None)
-                    if displaced is not None:
-                        self._result_bytes -= int(displaced.bindings.nbytes)
-                    self._results[(t, v)] = tbl
-                    self._result_bytes += nbytes
-                while (len(self._results) > self._result_cache_size
-                       or self._result_bytes > self._result_cache_bytes):
-                    _, old = self._results.popitem(last=False)
-                    self._result_bytes -= int(old.bindings.nbytes)
+            if self._result_cache_size > 0 and self.store.version == v:
+                with self._memo_lock:
+                    for t, tbl in zip(todo, tables):
+                        nbytes = int(tbl.bindings.nbytes)
+                        if nbytes > self._result_cache_bytes:
+                            continue   # would evict everything; skip
+                        displaced = self._results.pop((t, v), None)
+                        if displaced is not None:
+                            self._result_bytes -= int(
+                                displaced.bindings.nbytes)
+                        self._results[(t, v)] = tbl
+                        self._result_bytes += nbytes
+                    while (len(self._results) > self._result_cache_size
+                           or self._result_bytes > self._result_cache_bytes):
+                        _, old = self._results.popitem(last=False)
+                        self._result_bytes -= int(old.bindings.nbytes)
         return [found[t] for t in texts]
 
     def clear_cache(self) -> None:
         """Cold-start: drop the endpoint's result memo AND the engine's
         scan/plan/result LRUs (compiled plans survive — they are
         store-independent)."""
-        self._results.clear()
-        self._result_bytes = 0
+        with self._memo_lock:
+            self._results.clear()
+            self._result_bytes = 0
         self.engine.clear_cache()
 
     def query(self, text: str) -> SolutionTable:

@@ -523,6 +523,69 @@ def test_feasibility_never_stale_under_hammered_rebalance(small_graph):
                 assert sol_rows(sys_.engine.execute(es.store, q)) == want
 
 
+def test_endpoint_result_memo_never_stale_under_hammered_deltas(small_graph):
+    """Companion to the feasibility hammer (ISSUE 6 satellite 3): an
+    endpoint's version-keyed result memo stays correct while a churn thread
+    hammers ``apply_delta`` against in-flight ``query_many`` batches.
+
+    The churn is a content-no-op (each delta evicts and re-adds the same
+    row), so the data is constant while the version token moves constantly
+    — any batch caching results under its dispatch-time version after a
+    mid-batch move would be flagged by ``_run``'s re-validation; here we
+    assert the observable contract: every answer equals the static
+    reference, nothing errors, and post-churn queries still cache sanely.
+    """
+    from repro.sparql.endpoint import SparqlEndpoint
+    g = small_graph
+    ep = SparqlEndpoint(g.store, g.dictionary)
+    texts = workload_sparql(g, 6, seed=9)
+    ref = [sol_rows(t) for t in
+           SparqlEndpoint(g.store, g.dictionary).query_many(texts)]
+    stop = threading.Event()
+    errors = []
+
+    def churn():
+        try:
+            while not stop.is_set():
+                row = g.store.triples()[:1]
+                g.store.apply_delta(TripleDelta(
+                    base_version=g.store.version, add=row, evict=row))
+        except Exception as exc:          # pragma: no cover - fail path
+            errors.append(exc)
+
+    def client(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(40):
+                idx = [int(rng.integers(len(texts))) for _ in range(3)]
+                tables = ep.query_many([texts[i] for i in idx])
+                for i, t in zip(idx, tables):
+                    assert sol_rows(t) == ref[i], texts[i]
+        except Exception as exc:          # pragma: no cover - fail path
+            errors.append(exc)
+
+    churner = threading.Thread(target=churn)
+    clients = [threading.Thread(target=client, args=(s,)) for s in range(4)]
+    churner.start()
+    try:
+        for c in clients:
+            c.start()
+        for c in clients:
+            c.join(60)
+    finally:
+        stop.set()
+        churner.join(30)
+    assert not errors, errors[:1]
+    # post-churn: a quiet batch caches under the now-stable version and
+    # still answers from the memo correctly
+    tables = ep.query_many(texts)
+    for want, t in zip(ref, tables):
+        assert sol_rows(t) == want
+    v = g.store.version
+    assert any(k == (texts[0], v) for k in ep._results)
+    assert sol_rows(ep.query(texts[0])) == ref[0]
+
+
 def test_serving_pool_republish_is_atomic():
     from repro.runtime.serving import OffloadServingPool, Replica
     pool = OffloadServingPool(
