@@ -56,6 +56,22 @@ sequentially vs overlapped (``round_rebalance_sync_s{S}`` /
 ``round_rebalance_overlap_s{S}`` — the async compute phase overlaps the
 round; commit waits at the epoch barrier).
 
+``--kernels`` adds the device-kernel axis (PR 7):
+
+- ``kernel_triple_scan_many``   batched candidate scan: Q deduplicated
+                                patterns x T triples in one launch; derived
+                                reports bytes streamed per scan and the
+                                achieved GB/s (compare against the roofline's
+                                memory-bound peak)
+- ``kernel_probe_sorted_many``  the sorted-probe join kernel over the hottest
+                                predicate's sorted index
+- ``engine_jax_{device,host}_s{S}``  cold engine batches with the
+                                device-resident join pipeline vs the forced
+                                host path (``device_resident=False``) —
+                                ``host_transfers`` / ``transfer_bytes`` /
+                                ``scalar_syncs`` in ``derived`` record the
+                                one-bulk-transfer-per-batch contract
+
 The workload repeats a pool of template queries (users re-issue hot
 queries), so scan dedup and the result cache both engage — the acceptance
 targets are ``engine_numpy_batch`` beating ``engine_loop`` on a >=64-query
@@ -119,6 +135,10 @@ def main() -> None:
                     help="placement data-plane axis: full re-ship vs delta "
                          "rebalance bytes/wall-clock + sync vs overlapped "
                          "rebalance-round pairs")
+    ap.add_argument("--kernels", action="store_true",
+                    help="device-kernel axis (PR 7): triple_scan_many / "
+                         "probe_sorted_many throughput + the device-resident "
+                         "vs host join pipeline with transfer accounting")
     ap.add_argument("--round-edges", type=int, default=4,
                     help="edge servers in the --join/--rebalance rounds")
     args = ap.parse_args()
@@ -242,7 +262,10 @@ def main() -> None:
             round_queries, policy="greedy",
             observe=False).assignment_counts)
 
-        modes = (("seq", False), ("thread", True), ("process", "process"))
+        # explicit mode strings: overlap=True now auto-picks process for
+        # numpy engines, so the thread row must ask for threads by name
+        modes = (("seq", False), ("thread", "thread"),
+                 ("process", "process"))
         t_round = {name: float("inf") for name, _ in modes}
         mode_seen = {name: "seq" for name, _ in modes}
         for _ in range(max(3, args.repeats)):            # interleaved
@@ -397,6 +420,91 @@ def main() -> None:
             rows[-2] = (rows[-2][0], rows[-2][1],
                         rows[-2][2] + f"|pallas={mode}")
 
+    # ---- device-kernel axis (--kernels, PR 7) -----------------------------
+    if args.kernels:
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from collections import Counter
+
+        from repro.kernels import default_interpret
+        from repro.kernels.join_probe import probe_sorted_many
+        from repro.kernels.triple_scan import triple_scan_many
+        from repro.sparql.engine import JaxBackend
+
+        interp = default_interpret()
+        pmode = "interpret" if interp else "compiled"
+        kern_repeats = max(1, args.repeats - 2)
+
+        # batched candidate scan over the workload's deduplicated patterns:
+        # each of the Q patterns streams all T triple rows (12 B each)
+        triples = jnp.asarray(g.store.triples(), jnp.int32)
+        pat_mat = jnp.asarray(np.stack(
+            [[tp.s if isinstance(tp.s, int) else -1,
+              tp.p if isinstance(tp.p, int) else -1,
+              tp.o if isinstance(tp.o, int) else -1] for tp in scan_tps]),
+            jnp.int32)
+
+        def scan_call():
+            jax.block_until_ready(
+                triple_scan_many(triples, pat_mat, interpret=interp))
+
+        scan_call()                              # stage + compile
+        t_sc = bench(scan_call, len(scan_tps), kern_repeats)
+        rows.append((
+            "kernel_triple_scan_many", t_sc * 1e6,
+            f"backend=jax|pallas={pmode}|patterns={len(scan_tps)}"
+            f"|triples={g.store.num_triples}"
+            f"|bytes_per_scan={int(triples.nbytes)}"
+            f"|achieved_gbps={triples.nbytes / t_sc / 1e9:.3f}"))
+
+        # sorted-probe join kernel over the hottest predicate's index:
+        # each probe row streams all K keys (4 B each)
+        pid = Counter(tp.p for tp in scan_tps
+                      if isinstance(tp.p, int)).most_common(1)[0][0]
+        keys = jnp.asarray(g.store.pred_index(pid).s_sorted, jnp.int32)
+        rng_p = np.random.default_rng(0)
+        probes = jnp.asarray(
+            rng_p.integers(0, g.store.num_entities, (8, 1024)), jnp.int32)
+
+        def probe_call():
+            jax.block_until_ready(
+                probe_sorted_many(keys, probes, interpret=interp))
+
+        probe_call()
+        t_pr = bench(probe_call, int(probes.shape[0]), kern_repeats)
+        rows.append((
+            "kernel_probe_sorted_many", t_pr * 1e6,
+            f"backend=jax|pallas={pmode}|keys={int(keys.shape[0])}"
+            f"|probes_per_row={int(probes.shape[1])}"
+            f"|bytes_per_row={int(keys.nbytes)}"
+            f"|achieved_gbps={max(keys.nbytes, 1) / t_pr / 1e9:.3f}"))
+
+        # end-to-end: device-resident join pipeline vs forced host path on
+        # the largest sharded store, with the transfer accounting that
+        # backs the one-bulk-transfer-per-batch contract
+        ks = f"_s{max(shard_counts)}" if shard_counts else ""
+        store_k = dict(stores)[ks]
+        for dr_name, dr in (("device", True), ("host", False)):
+            bk = JaxBackend(device_resident=dr)
+            eng_k = QueryEngine(backend=bk)
+
+            def cold_k():
+                eng_k.clear_cache()
+                eng_k.execute_batch(store_k, queries)
+
+            t_k = bench(cold_k, len(queries), kern_repeats)
+            s = eng_k.stats
+            rows.append((
+                f"engine_jax_{dr_name}{ks}", t_k * 1e6,
+                f"backend=jax|pallas={pmode}|device_resident={dr}"
+                f"|device_queries={s.device_queries}"
+                f"|device_fallbacks={s.device_fallbacks}"
+                f"|device_joins={s.join.joins_device}"
+                f"|host_transfers={s.host_transfers}"
+                f"|transfer_bytes={s.host_transfer_bytes}"
+                f"|scalar_syncs={s.scalar_syncs}"))
+
     for name, us, derived in rows:
         qps = 1e6 / us
         print(f"{name},{us:.1f},{derived}|qps={qps:.0f}")
@@ -416,6 +524,7 @@ def main() -> None:
                 "repeats": args.repeats,
                 "jax": not args.skip_jax,
                 "join_axis": bool(args.join),
+                "kernel_axis": bool(args.kernels),
                 "algebra_axis": bool(args.algebra),
                 "rebalance_axis": bool(args.rebalance),
                 "round_edges": (args.round_edges

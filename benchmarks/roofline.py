@@ -15,6 +15,12 @@ per-family formulas for GNN / recsys; the ratio MODEL/HLO exposes remat and
 dispatch overheads.
 
 TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI (brief constants).
+
+A ``roofline_query_*`` section models the SPARQL device kernels
+(``triple_scan_many`` / ``probe_sorted_many``) against the HBM roof —
+they stream bytes with no reuse, so the memory floor IS the roofline —
+and reports achieved-vs-peak when ``BENCH_engine.json`` carries a
+``bench_engine --kernels`` run (see :func:`query_kernel_rooflines`).
 """
 
 from __future__ import annotations
@@ -124,7 +130,51 @@ def load_all(dryrun_dir: str = "artifacts/dryrun") -> list[dict]:
     return rows
 
 
+# bytes streamed per call when no bench artifact exists (nominal sizes:
+# a 100k-triple store scan, a 25k-entry predicate index probe row)
+_QUERY_KERNEL_NOMINAL = {
+    "kernel_triple_scan_many": ("bytes_per_scan", 100_000 * 3 * 4),
+    "kernel_probe_sorted_many": ("bytes_per_row", 25_000 * 4),
+}
+
+
+def query_kernel_rooflines(bench_json: str = "BENCH_engine.json"
+                           ) -> list[str]:
+    """Query-kernel section (PR 7): both device join kernels are streaming
+    compare-and-reduce pipelines with no data reuse, so their roofline is
+    purely memory-bound — the floor is bytes_streamed / HBM_BW. When a
+    ``bench_engine --kernels`` run left ``BENCH_engine.json`` behind, the
+    achieved time is reported against that floor (``frac_of_peak`` is only
+    meaningful for compiled TPU runs; CPU interpret mode is a correctness
+    tool, not a fast path)."""
+    by_name: dict[str, dict] = {}
+    if os.path.exists(bench_json):
+        with open(bench_json) as f:
+            by_name = {r["name"]: r
+                       for r in json.load(f).get("rows", [])}
+    lines = []
+    for name, (bytes_key, default_bytes) in _QUERY_KERNEL_NOMINAL.items():
+        rec = by_name.get(name)
+        nbytes, achieved_us = default_bytes, None
+        if rec is not None:
+            derived = dict(kv.split("=", 1)
+                           for kv in rec["derived"].split("|") if "=" in kv)
+            nbytes = int(derived.get(bytes_key, default_bytes))
+            achieved_us = float(rec["us_per_call"])
+        floor_us = nbytes / HBM_BW * 1e6
+        extra = (f"|achieved_us={achieved_us:.1f}"
+                 f"|frac_of_peak={floor_us / achieved_us:.4f}"
+                 if achieved_us else
+                 "|achieved=n/a (run bench_engine --kernels first)")
+        lines.append(f"roofline_query_{name.removeprefix('kernel_')},"
+                     f"{floor_us:.3f},bytes_streamed={nbytes}"
+                     f"|hbm_floor_us={floor_us:.3f}{extra}")
+    return lines
+
+
 def main(quick: bool = True, mesh: str = "single") -> None:
+    for line in query_kernel_rooflines():
+        print(line)
     rows = [r for r in load_all() if r["mesh"] == mesh]
     if not rows:
         print("roofline_no_data,0.0,run=repro.launch.dryrun --all first")

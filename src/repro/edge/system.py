@@ -13,10 +13,12 @@ CRA-optimal resource split; wall-clock matcher times are also recorded so
 benchmarks can report both modeled and measured numbers.
 
 ``run_round_batched`` executes each server's assignment as one engine batch;
-with ``overlap=True`` (or ``"thread"``) the per-server batches run through a
-thread pool so edge and cloud execution no longer serialize (the shared
-engine's caches are lock-guarded; per-server wall clocks are measured inside
-each thread and feed the Eq. 5 accounting unchanged). ``overlap="process"``
+``overlap=True`` resolves per backend (:func:`resolve_overlap_mode`):
+process mode for numpy engines, thread mode for jax. ``overlap="thread"``
+runs the per-server batches through a thread pool so edge and cloud
+execution no longer serialize (the shared engine's caches are
+lock-guarded; per-server wall clocks are measured inside each thread and
+feed the Eq. 5 accounting unchanged). ``overlap="process"``
 instead dispatches batches to a persistent fork-based worker pool — true
 parallelism for GIL-bound NumPy deployments: workers inherit the stores
 copy-on-write and return only the tiny :class:`ExecutionRecord`s (match
@@ -78,6 +80,25 @@ from .server import CloudServer, EdgeServer
 # referent was alive at fork time, so the copy-on-write snapshot resolves.
 _WORKER_SYSTEM = None       # weakref.ref to the pool-owning system, or None
 _WORKER_EPOCH = 0
+
+
+def resolve_overlap_mode(overlap: bool | str, backend_name: str) -> str:
+    """Resolve a ``run_round_batched(overlap=...)`` argument to a mode.
+
+    Explicit ``"thread"`` / ``"process"`` strings are honored as given
+    (the safety downgrades in :meth:`EdgeCloudSystem.run_round_batched`
+    still apply afterwards). ``overlap=True`` auto-picks by engine
+    backend: **process** for numpy — thread overlap there is GIL-bound,
+    ~0.75x vs sequential (see ROADMAP), while the fork pool actually wins
+    — and **thread** for jax, whose kernels release the GIL and whose
+    live XLA runtime makes forking unsafe anyway. ``False`` -> ``""``
+    (sequential).
+    """
+    if not overlap:
+        return ""
+    if isinstance(overlap, str):
+        return overlap
+    return "process" if backend_name == "numpy" else "thread"
 
 
 def _xla_initialized() -> bool:
@@ -479,7 +500,10 @@ class EdgeCloudSystem:
         ``tests/test_engine.py``). Per-query ``measured_exec_seconds`` is the
         batch wall time apportioned evenly over the batch.
 
-        ``overlap=True`` (or ``"thread"``) dispatches each server's batch
+        ``overlap=True`` auto-picks the mode per backend
+        (:func:`resolve_overlap_mode`): process overlap for numpy engines
+        (thread overlap is GIL-bound there) and thread overlap for jax.
+        ``overlap="thread"`` dispatches each server's batch
         through a thread pool so edge and cloud batches no longer serialize
         — the engine's caches are lock-guarded and the NumPy/JAX hot paths
         release the GIL where they can. ``overlap="process"`` uses the
@@ -523,8 +547,7 @@ class EdgeCloudSystem:
             assigned.append(k)
             counts[k] = counts.get(k, 0) + 1
 
-        mode = ("" if not overlap
-                else overlap if isinstance(overlap, str) else "thread")
+        mode = resolve_overlap_mode(overlap, self.engine.backend.name)
         if mode == "process":
             import multiprocessing as mp
             if (self.engine.backend.name == "jax" or _xla_initialized()

@@ -1,3 +1,21 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+from __future__ import annotations
+
+import functools
+
+
+@functools.lru_cache(maxsize=1)
+def default_interpret() -> bool:
+    """Whether Pallas kernels should run in interpret mode by default.
+
+    Compiled on real accelerators (TPU / GPU), interpret-mode on CPU where
+    Mosaic cannot lower.  Every kernel call site should route its default
+    through this single helper so real hardware never silently runs the
+    slow interpreter (and CPU CI never tries to compile).
+    """
+    import jax
+
+    return jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm")

@@ -1,0 +1,192 @@
+"""Sorted-probe join (Pallas TPU) — the device side of the matcher's join.
+
+``sparql.matcher`` joins a new pattern into the current binding table by
+probing each bound value into a *sorted* key column of the candidate set
+(``np.searchsorted`` left/right -> ``[lo, hi)`` run bounds over the
+``pred_index`` views built in PR 3). This module is the device analogue:
+
+* :func:`probe_sorted` / :func:`probe_sorted_many` — binary search as a
+  branchless compare-and-count streaming reduction.  For every probe value
+  ``v``: ``lo = sum(keys < v)`` and ``hi = sum(keys <= v)``, accumulated
+  block-by-block while the sorted key column streams HBM -> VMEM.  On the
+  VPU this beats a gather-based bisection (vector gathers are the weak
+  spot; dense compares are free), and the result is *bit-identical* to
+  ``np.searchsorted(keys, v, "left"/"right")``.
+* :func:`scan_probe` — the fused scan->join kernel for the common
+  bound-predicate star shape: one launch computes the candidate-scan mask
+  AND the first join's ``[lo, hi)`` bounds from the matched rows' subject
+  or object column, with no intermediate materialization between scan and
+  probe.
+
+Everything takes the true (unpadded) lengths via scalar prefetch, so key /
+probe padding values never affect the counts and ONE compiled kernel
+serves every (pattern, key-column) pair — no recompilation per query.
+Expansion of the ``[lo, hi)`` runs into binding rows stays in XLA
+(cumsum + repeat + gather), mirroring how the scan kernel leaves
+compaction to XLA.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_PAD_KEY = jnp.iinfo(jnp.int32).max   # sorted-column padding (ignored via K)
+
+
+def _probe_many_kernel(meta_ref, key_ref, probe_ref, lo_ref, hi_ref, *,
+                       bk: int, bp: int):
+    ki = pl.program_id(2)
+    n_keys = meta_ref[0]
+    keys = key_ref[...]                                # [bk] int32
+    v = probe_ref[...]                                 # [1, bp] int32
+    # index-mask the key padding: only positions < n_keys count
+    idx = jax.lax.broadcasted_iota(jnp.int32, (bk, bp), 0) + ki * bk
+    valid = idx < n_keys                               # [bk, bp]
+    kv = keys[:, None]                                 # [bk, 1]
+    lo_blk = ((kv < v) & valid).astype(jnp.int32).sum(axis=0)    # [bp]
+    hi_blk = ((kv <= v) & valid).astype(jnp.int32).sum(axis=0)   # [bp]
+
+    @pl.when(ki == 0)
+    def _init():
+        lo_ref[...] = lo_blk[None, :]
+        hi_ref[...] = hi_blk[None, :]
+
+    @pl.when(ki > 0)
+    def _acc():
+        lo_ref[...] += lo_blk[None, :]
+        hi_ref[...] += hi_blk[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "bp", "interpret"))
+def probe_sorted_many(keys: jnp.ndarray, probes: jnp.ndarray,
+                      bk: int = 2048, bp: int = 512,
+                      interpret: bool = False) -> tuple[jnp.ndarray,
+                                                        jnp.ndarray]:
+    """Batched sorted probe: keys [K] ascending, probes [Q, P] -> lo/hi [Q, P].
+
+    ``lo[q, j] == np.searchsorted(keys, probes[q, j], "left")`` and
+    ``hi[q, j]`` the ``"right"`` bound; ``hi - lo`` is each probe's run
+    length.  Key padding is masked by true length (any probe value is
+    safe); pad *probes* with ``-1`` to get ``lo == hi == 0`` runs for
+    non-negative id spaces.
+    """
+    K = keys.shape[0]
+    Q, P = probes.shape
+    k_pad = max(bk, ((K + bk - 1) // bk) * bk)
+    if k_pad != K:
+        keys = jnp.pad(keys, (0, k_pad - K), constant_values=_PAD_KEY)
+    p_pad = ((P + bp - 1) // bp) * bp
+    if p_pad != P:
+        probes = jnp.pad(probes, ((0, 0), (0, p_pad - P)),
+                         constant_values=-1)
+    meta = jnp.asarray([K], jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, p_pad // bp, k_pad // bk),
+        in_specs=[pl.BlockSpec((bk,), lambda qi, pi, ki, meta: (ki,)),
+                  pl.BlockSpec((1, bp), lambda qi, pi, ki, meta: (qi, pi))],
+        out_specs=[pl.BlockSpec((1, bp), lambda qi, pi, ki, meta: (qi, pi)),
+                   pl.BlockSpec((1, bp), lambda qi, pi, ki, meta: (qi, pi))],
+    )
+    lo, hi = pl.pallas_call(
+        functools.partial(_probe_many_kernel, bk=bk, bp=bp),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((Q, p_pad), jnp.int32),
+                   jax.ShapeDtypeStruct((Q, p_pad), jnp.int32)],
+        interpret=interpret,
+    )(meta, keys.astype(jnp.int32), probes.astype(jnp.int32))
+    return lo[:, :P], hi[:, :P]
+
+
+def probe_sorted(keys: jnp.ndarray, probes: jnp.ndarray, bk: int = 2048,
+                 bp: int = 512,
+                 interpret: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sorted probe: keys [K] ascending, probes [P] -> (lo [P], hi [P])."""
+    lo, hi = probe_sorted_many(keys, probes[None, :], bk=bk, bp=bp,
+                               interpret=interpret)
+    return lo[0], hi[0]
+
+
+def _scan_probe_kernel(meta_ref, key_ref, trip_ref, mask_ref, lo_ref, hi_ref,
+                       *, bt: int, bk: int):
+    ki = pl.program_id(1)
+    s, p, o = meta_ref[0], meta_ref[1], meta_ref[2]
+    col, n_keys = meta_ref[3], meta_ref[4]
+    t = trip_ref[...]                                  # [bt, 3] int32
+    keys = key_ref[...]                                # [bk] int32
+
+    vals = jnp.where(col == 0, t[:, 0], t[:, 2])       # probe column [bt]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (bt, bk), 1) + ki * bk
+    valid = idx < n_keys                               # [bt, bk]
+    kv = keys[None, :]                                 # [1, bk]
+    lo_blk = ((kv < vals[:, None]) & valid).astype(jnp.int32).sum(axis=1)
+    hi_blk = ((kv <= vals[:, None]) & valid).astype(jnp.int32).sum(axis=1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m = jnp.ones((bt,), jnp.bool_)
+        m &= (t[:, 0] == s) | (s < 0)
+        m &= (t[:, 1] == p) | (p < 0)
+        m &= (t[:, 2] == o) | (o < 0)
+        mask_ref[...] = m.astype(jnp.int32)
+        lo_ref[...] = lo_blk
+        hi_ref[...] = hi_blk
+
+    @pl.when(ki > 0)
+    def _acc():
+        lo_ref[...] += lo_blk
+        hi_ref[...] += hi_blk
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("col", "bt", "bk", "interpret"))
+def scan_probe(triples: jnp.ndarray, pattern: jnp.ndarray,
+               keys: jnp.ndarray, col: int, bt: int = 2048, bk: int = 2048,
+               interpret: bool = False) -> tuple[jnp.ndarray, jnp.ndarray,
+                                                 jnp.ndarray]:
+    """Fused candidate scan + first-join probe in one kernel launch.
+
+    triples [T, 3] int32; pattern [3] int32 (-1 wildcards); keys [K] int32
+    ascending sorted; ``col`` selects the probe column (0 = subject,
+    2 = object).  Returns ``(mask [T], lo [T], hi [T])`` where ``mask`` is
+    the scan match mask and ``lo/hi`` are searchsorted left/right bounds of
+    *every* row's probe-column value (consumers take
+    ``counts = where(mask, hi - lo, 0)``) — the star-shape seed scan and
+    its first equi-join without materializing the matched rows in between.
+    """
+    if col not in (0, 2):
+        raise ValueError(f"col must be 0 (subject) or 2 (object), got {col}")
+    T = triples.shape[0]
+    K = keys.shape[0]
+    t_pad = max(bt, ((T + bt - 1) // bt) * bt)
+    if t_pad != T:
+        triples = jnp.pad(triples, ((0, t_pad - T), (0, 0)),
+                          constant_values=-2)          # never matches
+    k_pad = max(bk, ((K + bk - 1) // bk) * bk)
+    if k_pad != K:
+        keys = jnp.pad(keys, (0, k_pad - K), constant_values=_PAD_KEY)
+    meta = jnp.concatenate([pattern.astype(jnp.int32),
+                            jnp.asarray([col, K], jnp.int32)])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t_pad // bt, k_pad // bk),
+        in_specs=[pl.BlockSpec((bk,), lambda ti, ki, meta: (ki,)),
+                  pl.BlockSpec((bt, 3), lambda ti, ki, meta: (ti, 0))],
+        out_specs=[pl.BlockSpec((bt,), lambda ti, ki, meta: (ti,)),
+                   pl.BlockSpec((bt,), lambda ti, ki, meta: (ti,)),
+                   pl.BlockSpec((bt,), lambda ti, ki, meta: (ti,))],
+    )
+    mask, lo, hi = pl.pallas_call(
+        functools.partial(_scan_probe_kernel, bt=bt, bk=bk),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((t_pad,), jnp.int32),
+                   jax.ShapeDtypeStruct((t_pad,), jnp.int32),
+                   jax.ShapeDtypeStruct((t_pad,), jnp.int32)],
+        interpret=interpret,
+    )(meta, keys.astype(jnp.int32), triples.astype(jnp.int32))
+    return mask[:T], lo[:T], hi[:T]

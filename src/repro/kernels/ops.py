@@ -19,6 +19,10 @@ from .triple_scan import triple_scan as _scan_pallas
 
 
 def _backend(impl: str) -> str:
+    # NOTE: this picks pallas vs the jnp *reference* (a different axis than
+    # repro.kernels.default_interpret, which resolves pallas_call's
+    # interpret flag); the TPU-grid kernels only compile on TPU, so GPU
+    # uses the XLA reference here.
     if impl != "auto":
         return impl
     return "pallas" if jax.default_backend() == "tpu" else "xla"

@@ -91,3 +91,24 @@ def triple_scan_reference(triples: jnp.ndarray, s: int, p: int,
     if o >= 0:
         m &= triples[:, 2] == o
     return m.astype(jnp.int32)
+
+
+def probe_sorted_reference(keys: jnp.ndarray,
+                           probes: jnp.ndarray) -> tuple[jnp.ndarray,
+                                                         jnp.ndarray]:
+    """keys [K] sorted ascending; probes [...]. -> (lo, hi) searchsorted
+    left/right bounds, the matcher's ``np.searchsorted`` probe."""
+    lo = jnp.searchsorted(keys, probes, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(keys, probes, side="right").astype(jnp.int32)
+    return lo, hi
+
+
+def scan_probe_reference(triples: jnp.ndarray, s: int, p: int, o: int,
+                         keys: jnp.ndarray,
+                         col: int) -> tuple[jnp.ndarray, jnp.ndarray,
+                                            jnp.ndarray]:
+    """Fused scan+probe oracle: scan mask plus searchsorted bounds of
+    every row's probe-column value (col 0 = subject, 2 = object)."""
+    mask = triple_scan_reference(triples, s, p, o)
+    lo, hi = probe_sorted_reference(keys, triples[:, col])
+    return mask, lo, hi

@@ -10,6 +10,13 @@ take, which is already optimal there).
 The pattern (s, p, o) arrives as scalar prefetch (-1 == wildcard), so ONE
 compiled kernel serves every pattern — no recompilation per query, which is
 what a serving system needs.
+
+The scan is the FIRST stage of the device-resident join pipeline
+(:mod:`repro.sparql.device_join`): its mask is compacted on device and fed
+straight into the ``probe_sorted`` join kernel — or the scan and first
+probe fuse into one launch via :func:`repro.kernels.join_probe.scan_probe`
+— so eligible queries never round-trip to the host between leaf scan and
+join.
 """
 
 from __future__ import annotations

@@ -163,6 +163,17 @@ class TripleStore:
             self._pred_index[pid] = idx
         return idx
 
+    def owning_part(self, pid: int) -> tuple["TripleStore", int]:
+        """(flat store, global-id offset) holding predicate ``pid``.
+
+        The monolithic store owns everything at offset 0; the sharded
+        store returns the predicate's owning shard. This is how
+        device-resident consumers (:mod:`repro.sparql.device_join`) address
+        a predicate's shard-LOCAL ``pred_index`` views plus the lift needed
+        to go back to global triple ids.
+        """
+        return self, 0
+
     # -- basic accessors -----------------------------------------------------
     @property
     def num_triples(self) -> int:

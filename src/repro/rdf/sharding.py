@@ -146,6 +146,14 @@ class ShardedTripleStore:
     def shard_of_pred(self, pid: int) -> int:
         return int(shard_of_pred(pid, self.num_shards))
 
+    def owning_part(self, pid: int) -> tuple[TripleStore, int]:
+        """(owning shard, global-id offset) for predicate ``pid`` — the
+        shard-local counterpart of :meth:`pred_index` (same views, ids NOT
+        lifted), used by device-resident consumers that stage shard-local
+        sorted views and re-lift on the host after the batch fetch."""
+        k = self.shard_of_pred(pid)
+        return self.shards[k], int(self.shard_offsets[k])
+
     def parts(self) -> list[tuple[TripleStore, int]]:
         """Non-empty ``(shard, global_id_offset)`` pairs — the candidate
         partitions a wildcard-predicate scan (and the shard-local join

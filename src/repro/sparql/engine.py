@@ -65,6 +65,26 @@ back to the global scan+sort join (the ``--join`` baseline in
 :class:`EngineStats`: ``prescan_seconds`` / ``join_seconds`` and the
 ``join`` :class:`~repro.sparql.matcher.JoinStats` counters.
 
+**5. Device-resident join pipeline (jax backend).** With
+``JaxBackend(device_resident=True)`` (the default) and
+``shard_local_joins`` on, every cache-missed query that
+:func:`repro.sparql.device_join.device_eligible` accepts — bound-predicate
+star/path shapes with no repeated variables, whose every non-seed plan
+step is a presorted probe — executes entirely on the accelerator: the seed
+scan (fused with its first probe via ``scan_probe`` where possible),
+on-device compaction, and ``probe_sorted`` Pallas joins over staged
+shard-local ``PredIndex`` views. All such queries of a batch share ONE
+bulk device->host transfer (``EngineStats.host_transfers``; O(1)-byte
+control scalars are counted separately as ``scalar_syncs``). Everything
+else — variable predicates, repeated variables, equality-masked closing
+joins — transparently falls back to the host pipeline above
+(``device_queries`` / ``device_fallbacks`` record the split, and
+``JoinStats.joins_device`` marks where each presorted join ran). Force
+the host path with ``device_resident=False``; force interpret-mode
+kernels off-TPU with ``JaxBackend(interpret=True)`` (the default via
+:func:`repro.kernels.default_interpret` — compiled on TPU/GPU, interpret
+on CPU; the resolved mode is reported in ``EngineStats.backend_mode``).
+
 **Cache key contracts.**
 
 - *scan key* (:func:`scan_key`): constants + repeated-variable structure
@@ -105,6 +125,7 @@ from typing import Callable
 import numpy as np
 
 from ..rdf.graph import RDFStore
+from .device_join import DeviceBatch, device_eligible
 from .matcher import (CandidateParts, JoinStats, MatchResult, _candidates,
                       match_bgp, plan_bgp)
 from .query import QueryGraph, TriplePattern
@@ -229,12 +250,15 @@ class NumpyBackend(MatcherBackend):
 
 
 class JaxBackend(MatcherBackend):
-    """Scans via the ``triple_scan`` Pallas kernel.
+    """Scans via the ``triple_scan`` Pallas kernel, joins optionally
+    device-resident via the ``probe_sorted`` / ``scan_probe`` kernels.
 
     [T, 3] triple arrays are staged to the device once per (shard) store
     version; every scan then evaluates a constant/wildcard mask on-device
-    (VPU on TPU, interpret mode on CPU) followed by host-side compaction and
-    repeated-variable filters. ``bt`` is the stream block size.
+    (VPU on TPU, interpret mode on CPU — resolved by
+    :func:`repro.kernels.default_interpret` unless ``interpret`` is forced)
+    followed by compaction and repeated-variable filters. ``bt`` is the
+    stream block size.
 
     On a :class:`~repro.rdf.sharding.ShardedTripleStore` each shard is staged
     as its own device array, and a scan streams only the shards it can touch:
@@ -242,7 +266,18 @@ class JaxBackend(MatcherBackend):
     non-empty shard for wildcard-predicate ones. ``prescan`` groups a batch's
     deduplicated scans by touched shard and fuses each group through
     ``triple_scan_many`` — one kernel launch per *touched shard*, not per
-    pattern.
+    pattern — then materializes every group's masks in ONE bulk
+    device->host transfer.
+
+    ``device_resident=True`` (default) additionally lets the engine run
+    device-eligible queries fully on the accelerator through
+    :mod:`repro.sparql.device_join` — shard-local ``pred_index`` sorted
+    views get their own staged-on-device LRU keyed by (shard version,
+    predicate), so a placement delta invalidates only touched shards'
+    views. ``host_transfers`` / ``host_transfer_bytes`` count bulk
+    device->host array materializations; ``scalar_syncs`` counts the O(1)
+    control scalars (row counts) host-driven allocation needs — see the
+    :mod:`~repro.sparql.device_join` docstring for the accounting contract.
     """
 
     name = "jax"
@@ -252,20 +287,54 @@ class JaxBackend(MatcherBackend):
     # one array per shard — so a single slot would re-upload [T, 3] arrays
     # on every store switch within a round
     MAX_STAGED_STORES = 16
+    # staged (shard version, predicate) sorted-view tuples for the device
+    # join path; four small int32 arrays per hot predicate
+    MAX_STAGED_VIEWS = 256
 
     def __init__(self, bt: int = 2048, interpret: bool | None = None,
-                 max_staged: int | None = None) -> None:
-        import jax
+                 max_staged: int | None = None,
+                 device_resident: bool = True) -> None:
+        from ..kernels import default_interpret
 
         self.bt = int(bt)
         if interpret is None:
-            interpret = jax.default_backend() != "tpu"
+            interpret = default_interpret()
         self.interpret = bool(interpret)
+        self.device_resident = bool(device_resident)
         self.max_staged = int(max_staged if max_staged is not None
                               else self.MAX_STAGED_STORES)
+        self.max_staged_views = self.MAX_STAGED_VIEWS
         self._staged: OrderedDict[int, object] = OrderedDict()  # version->arr
+        self._staged_views: OrderedDict[tuple, tuple] = OrderedDict()
+        # transfer accounting (see class docstring); cumulative totals are
+        # mirrored into EngineStats at every batch end
+        self.host_transfers = 0
+        self.host_transfer_bytes = 0
+        self.scalar_syncs = 0
         # staging LRU is shared across overlapped server batches
         self._stage_lock = threading.Lock()
+
+    def _fetch(self, tree):
+        """ONE bulk device->host materialization of a pytree of arrays —
+        every mask / binding-column transfer must route through here so
+        ``host_transfers`` counts actual transfer events."""
+        import jax
+
+        out = jax.device_get(tree)
+        nbytes = sum(int(a.nbytes)
+                     for a in jax.tree_util.tree_leaves(out)
+                     if hasattr(a, "nbytes"))
+        with self._stage_lock:
+            self.host_transfers += 1
+            self.host_transfer_bytes += nbytes
+        return out
+
+    def _scalar(self, x) -> int:
+        """Sync one O(1) control scalar off the device (counted separately
+        from bulk transfers — see the class docstring)."""
+        with self._stage_lock:
+            self.scalar_syncs += 1
+        return int(x)
 
     def _triples(self, store, min_slots: int = 1):
         """Device [T, 3] int32 copy of one *flat* store (a shard or a
@@ -292,6 +361,31 @@ class JaxBackend(MatcherBackend):
             while len(self._staged) > limit:
                 self._staged.popitem(last=False)
         return arr
+
+    def _pred_views(self, store: RDFStore, pid: int):
+        """Device copies of predicate ``pid``'s shard-LOCAL ``PredIndex``
+        sorted views: ``((s_sorted, s_order, o_sorted, o_order), offset,
+        flat_store)``, LRU-kept by (owning shard version, pid) — the same
+        version-granular discipline as the scan LRU, so a delta-rebalance
+        invalidates only touched shards' staged views."""
+        import jax.numpy as jnp
+
+        flat, off = store.owning_part(pid)
+        key = (flat.version, pid)
+        with self._stage_lock:
+            views = self._staged_views.get(key)
+            if views is not None:
+                self._staged_views.move_to_end(key)
+                return views, off, flat
+        idx = flat.pred_index(pid)
+        views = tuple(jnp.asarray(a, dtype=jnp.int32)
+                      for a in (idx.s_sorted, idx.s_order,
+                                idx.o_sorted, idx.o_order))
+        with self._stage_lock:
+            self._staged_views[key] = views
+            while len(self._staged_views) > self.max_staged_views:
+                self._staged_views.popitem(last=False)
+        return views, off, flat
 
     @staticmethod
     def _store_slots(store: RDFStore) -> int:
@@ -339,11 +433,14 @@ class JaxBackend(MatcherBackend):
 
         pat = jnp.asarray(self._pattern_vec(tp))
         slots = self._store_slots(store)
+        scan_parts = self._scan_parts(store, tp)
+        masks = [triple_scan(self._triples(flat, min_slots=slots), pat,
+                             bt=self.bt, interpret=self.interpret)
+                 for flat, _off in scan_parts]
         parts: list[np.ndarray] = []
-        for flat, off in self._scan_parts(store, tp):
-            mask = triple_scan(self._triples(flat, min_slots=slots), pat,
-                               bt=self.bt, interpret=self.interpret)
-            tids = np.flatnonzero(np.asarray(mask)).astype(np.int64) + off
+        for (flat, off), mask in zip(scan_parts,
+                                     self._fetch(masks) if masks else []):
+            tids = np.flatnonzero(mask).astype(np.int64) + off
             # the repeated-variable filter distributes over partitions
             parts.append(self._repeated_var_filter(store, tp, tids))
         return CandidateParts(parts)
@@ -374,11 +471,15 @@ class JaxBackend(MatcherBackend):
 
         slots = self._store_slots(store)
         parts: dict[tuple, list[np.ndarray]] = {k: [] for k in uniq}
+        launches = []
         for flat, off, keys in groups.values():     # one launch per group
             pats = np.stack([self._pattern_vec(uniq[k]) for k in keys])
-            masks = np.asarray(triple_scan_many(
+            launches.append((off, keys, triple_scan_many(
                 self._triples(flat, min_slots=slots), jnp.asarray(pats),
-                bt=self.bt, interpret=self.interpret))
+                bt=self.bt, interpret=self.interpret)))
+        # ONE bulk transfer materializes every group's masks together
+        fetched = self._fetch([m for _, _, m in launches]) if launches else []
+        for (off, keys, _), masks in zip(launches, fetched):
             for i, k in enumerate(keys):
                 tids = np.flatnonzero(masks[i]).astype(np.int64) + off
                 parts[k].append(
@@ -443,6 +544,23 @@ class EngineStats:
     ``filters_applied`` / ``optional_joins`` — FILTER / OPTIONAL
     (left-join) operator applications; ``union_branches`` — branches
     fed into UNION concatenations.
+
+    Device-residency counters: ``backend_mode`` is the resolved execution
+    mode (``"numpy"``, ``"jax-interpret"``, ``"jax-compiled"``).
+    ``device_queries`` / ``device_fallbacks`` split the cache-missed
+    queries of a device-capable backend into those served by the
+    device-resident pipeline (:mod:`repro.sparql.device_join`) vs those
+    that fell back to the host join path (ineligible shape: variable
+    predicates, repeated variables, masked joins, wildcard seed on a
+    sharded store). ``host_transfers`` / ``host_transfer_bytes`` /
+    ``scalar_syncs`` MIRROR the backend's cumulative totals (absolute
+    values re-copied at every batch end, so per-batch deltas are
+    meaningful): ``host_transfers`` counts bulk device->host array
+    materializations — exactly ONE per batch when every missed query is
+    device-eligible, one more for the host path's fused prescan when the
+    batch is mixed — while ``scalar_syncs`` counts the O(1)-byte row-count
+    reads host-driven allocation needs (excluded from the one-transfer
+    contract; see :mod:`repro.sparql.device_join`).
     """
 
     queries: int = 0
@@ -463,6 +581,12 @@ class EngineStats:
     filters_applied: int = 0
     optional_joins: int = 0
     union_branches: int = 0
+    backend_mode: str = ""
+    device_queries: int = 0
+    device_fallbacks: int = 0
+    host_transfers: int = 0
+    host_transfer_bytes: int = 0
+    scalar_syncs: int = 0
 
     @property
     def scans_deduped(self) -> int:
@@ -502,6 +626,10 @@ class QueryEngine:
         # kept as the --join benchmark reference)
         self.shard_local_joins = bool(shard_local_joins)
         self.stats = EngineStats()
+        interp = getattr(self.backend, "interpret", None)
+        self.stats.backend_mode = (
+            self.backend.name if interp is None else
+            f"{self.backend.name}-{'interpret' if interp else 'compiled'}")
         self._cache: OrderedDict[tuple, MatchResult] = OrderedDict()
         self._cached_bytes = 0
         # values are (CandidateParts, put-time global-id offset)
@@ -683,6 +811,19 @@ class QueryEngine:
             var_names=[canon_to_actual[v] for v in res.var_names],
             bindings=res.bindings, edge_ids=res.edge_ids)
 
+    @staticmethod
+    def _canonical(q: QueryGraph, canon_to_actual: dict[str, str]
+                   ) -> QueryGraph:
+        """``q`` under canonical variable names, so execution results are
+        independent of this query's variable spelling (cache-entry form)."""
+        actual_to_canon = {a: c for c, a in canon_to_actual.items()}
+        return QueryGraph(
+            patterns=[TriplePattern(
+                *(actual_to_canon.get(t, t) if isinstance(t, str)
+                  else t for t in (tp.s, tp.p, tp.o)))
+                for tp in q.patterns],
+            projection=[])
+
     # -- execution -----------------------------------------------------------
     def execute(self, store: RDFStore, q: QueryGraph) -> MatchResult:
         return self.execute_batch(store, [q])[0]
@@ -709,13 +850,36 @@ class QueryEngine:
         # plan each cache-missed query so only the patterns the join
         # pipeline will actually scan are prescanned (shard-local presorted
         # joins skip the scan entirely); scan memo seeded from the
-        # cross-batch scan LRU, the remaining distinct keys execute once
+        # cross-batch scan LRU, the remaining distinct keys execute once.
+        # Device-eligible queries peel off into the device-resident pipeline
+        # instead — their scans and joins never touch the host scan path
+        # (or its counters), and their bindings leave the device in one
+        # bulk transfer at the end of the device phase.
         memo: dict[tuple, CandidateParts] = {}
         plans: dict[int, list] = {}
+        device_jobs: dict[tuple, tuple] = {}    # ck -> (canonical q, plan)
+        join_stats = JoinStats()
+        join_dt = 0.0
+        use_device = (self.shard_local_joins
+                      and getattr(self.backend, "device_resident", False))
         if misses:
             need: list[TriplePattern] = []
             for i in misses:
-                plans[i] = self._plan_for(store, queries[i], keyed[i][0])
+                ck, canon_to_actual = keyed[i]
+                plans[i] = self._plan_for(store, queries[i], ck)
+                if use_device:
+                    if ck in device_jobs:
+                        with self._lock:
+                            self.stats.device_queries += 1
+                        continue
+                    cq = self._canonical(queries[i], canon_to_actual)
+                    if device_eligible(store, cq, plans[i]):
+                        device_jobs[ck] = (cq, plans[i])
+                        with self._lock:
+                            self.stats.device_queries += 1
+                        continue
+                    with self._lock:
+                        self.stats.device_fallbacks += 1
                 need += [queries[i].patterns[st.pattern]
                          for st in plans[i] if st.needs_scan]
             with self._lock:
@@ -741,6 +905,18 @@ class QueryEngine:
                     self.stats.prescan_seconds += (time.perf_counter()
                                                    - t_scan)
 
+        # device-resident phase: all queued queries execute on device, then
+        # ONE bulk device->host transfer materializes their results
+        device_results: dict[tuple, MatchResult] = {}
+        if device_jobs:
+            t_dev = time.perf_counter()
+            dbatch = DeviceBatch(self.backend, store)
+            for ck, (cq, plan) in device_jobs.items():
+                dbatch.add(ck, cq, plan)
+            device_results = dbatch.run(max_rows=self.max_rows,
+                                        stats=join_stats)
+            join_dt += time.perf_counter() - t_dev
+
         def scan(st: RDFStore, tp: TriplePattern) -> CandidateParts:
             k = scan_key(tp)
             if k not in memo:          # unplanned pattern added mid-join
@@ -756,31 +932,35 @@ class QueryEngine:
             return memo[k]
 
         out: list[MatchResult | None] = [None] * len(queries)
-        join_dt = 0.0
-        join_stats = JoinStats()
         for i, q in enumerate(queries):
             ck, canon_to_actual = keyed[i]
             cached = self._cache_get((store.version, ck))
             if cached is None:
-                # execute under canonical names so the cached entry is
-                # independent of this query's variable spelling
-                actual_to_canon = {a: c for c, a in canon_to_actual.items()}
-                canon_q = QueryGraph(
-                    patterns=[TriplePattern(
-                        *(actual_to_canon.get(t, t) if isinstance(t, str)
-                          else t for t in (tp.s, tp.p, tp.o)))
-                        for tp in q.patterns],
-                    projection=[])
-                t_join = time.perf_counter()
-                cached = match_bgp(store, canon_q, max_rows=self.max_rows,
-                                   candidates=scan, plan=plans.get(i),
-                                   stats=join_stats,
-                                   shard_local=self.shard_local_joins)
-                join_dt += time.perf_counter() - t_join
+                dres = device_results.get(ck)
+                if dres is not None:
+                    cached = dres
+                else:
+                    # execute under canonical names so the cached entry is
+                    # independent of this query's variable spelling
+                    canon_q = self._canonical(q, canon_to_actual)
+                    t_join = time.perf_counter()
+                    cached = match_bgp(store, canon_q,
+                                       max_rows=self.max_rows,
+                                       candidates=scan, plan=plans.get(i),
+                                       stats=join_stats,
+                                       shard_local=self.shard_local_joins)
+                    join_dt += time.perf_counter() - t_join
                 self._cache_put((store.version, ck), cached)
             out[i] = self._remap(cached, canon_to_actual)
         with self._lock:
             self.stats.join_seconds += join_dt
             self.stats.join.merge(join_stats)
+            bk = self.backend
+            if hasattr(bk, "host_transfers"):
+                # absolute backend totals, re-mirrored each batch so
+                # callers can take per-batch deltas
+                self.stats.host_transfers = bk.host_transfers
+                self.stats.host_transfer_bytes = bk.host_transfer_bytes
+                self.stats.scalar_syncs = bk.scalar_syncs
             self.stats.exec_seconds += time.perf_counter() - t0
         return out

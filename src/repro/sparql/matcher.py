@@ -133,6 +133,12 @@ class JoinStats:
     ``partitions_probed``: candidate partitions probed across all joins.
     ``merged_joins``: joins that merged >1 partition's partial bindings
     (variable-predicate / cross-shard joins on a sharded store).
+    ``joins_device``: presorted joins executed by the device-resident
+    pipeline (:mod:`repro.sparql.device_join`) through the
+    ``probe_sorted`` / ``scan_probe`` Pallas kernels instead of host
+    ``searchsorted``; every such join ALSO counts in ``joins_pred_index``
+    (it is the same plan step), so host/device runs agree on every other
+    counter and ``joins_device`` isolates where the join ran.
     """
 
     joins_pred_index: int = 0
@@ -141,6 +147,7 @@ class JoinStats:
     joins_cartesian: int = 0
     partitions_probed: int = 0
     merged_joins: int = 0
+    joins_device: int = 0
 
     def merge(self, other: "JoinStats") -> None:
         self.joins_pred_index += other.joins_pred_index
@@ -149,6 +156,7 @@ class JoinStats:
         self.joins_cartesian += other.joins_cartesian
         self.partitions_probed += other.partitions_probed
         self.merged_joins += other.merged_joins
+        self.joins_device += other.joins_device
 
 
 @dataclass
@@ -254,11 +262,18 @@ class JoinStep:
     ``use_pred_index``: the step probes the owning shard's cached
     ``PredIndex`` sorted views instead of scanning + sorting candidates;
     such steps never request a candidate scan (``needs_scan`` is False).
+    ``device_probe``: the step is additionally *device-capable* — a
+    ``use_pred_index`` join whose other endpoint is still unbound at this
+    step, so no equality masks apply and the whole join is expressible as
+    the ``probe_sorted`` kernel + XLA expansion. Backends without device
+    residency (numpy, or jax with ``device_resident=False``) simply ignore
+    the flag and run the step on the host — the transparent fallback.
     """
 
     pattern: int
     kind: str
     use_pred_index: bool = False
+    device_probe: bool = False
 
     @property
     def needs_scan(self) -> bool:
@@ -283,6 +298,7 @@ def plan_bgp(store: RDFStore, q: QueryGraph,
         svar = tp.s if isinstance(tp.s, str) else None
         ovar = tp.o if isinstance(tp.o, str) else None
         pvar = tp.p if isinstance(tp.p, str) else None
+        dp = False
         if j == 0:
             kind, upi = "seed", False
         elif svar in bound or ovar in bound:
@@ -292,11 +308,15 @@ def plan_bgp(store: RDFStore, q: QueryGraph,
             upi = (shard_local and isinstance(tp.p, int)
                    and svar is not None and ovar is not None
                    and svar != ovar)
+            # device-capable when exactly one endpoint is bound: no
+            # equality masks, so probe + expansion covers the whole join
+            dp = upi and not (svar in bound and ovar in bound)
         elif pvar in bound:
             kind, upi = "pred", False
         else:
             kind, upi = "cartesian", False
-        steps.append(JoinStep(pattern=i, kind=kind, use_pred_index=upi))
+        steps.append(JoinStep(pattern=i, kind=kind, use_pred_index=upi,
+                              device_probe=dp))
         bound.update(tp.variables())
     return steps
 

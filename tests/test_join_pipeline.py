@@ -469,6 +469,47 @@ def test_process_overlap_falls_back_to_threads_on_jax():
     assert sys_._proc_pool is None
 
 
+def test_overlap_mode_resolution():
+    """overlap=True auto-picks per backend (process for GIL-bound numpy,
+    thread for jax whose fork is unsafe); explicit strings pass through."""
+    from repro.edge.system import resolve_overlap_mode
+    assert resolve_overlap_mode(False, "numpy") == ""
+    assert resolve_overlap_mode(False, "jax") == ""
+    assert resolve_overlap_mode(True, "numpy") == "process"
+    assert resolve_overlap_mode(True, "jax") == "thread"
+    for explicit in ("thread", "process"):
+        assert resolve_overlap_mode(explicit, "numpy") == explicit
+        assert resolve_overlap_mode(explicit, "jax") == explicit
+
+
+def test_device_vs_host_joinstats_parity():
+    """The device-resident pipeline reports the SAME join counters as the
+    host path for the same plans — joins_device alone says WHERE a presorted
+    join ran, never changing what was counted."""
+    from dataclasses import asdict
+
+    from repro.sparql.engine import JaxBackend
+
+    g = generate_watdiv_like(scale=0.5, seed=11)
+    sh = ShardedTripleStore.from_store(g.store, 4)
+    qs = [QueryGraph([TriplePattern("?x", 0, "?y"),
+                      TriplePattern("?y", 1, "?z")], []),
+          QueryGraph([TriplePattern("?x", 2, "?y"),
+                      TriplePattern("?x", 3, "?z")], []),
+          QueryGraph([TriplePattern("?a", 1, "?b")], [])]
+    eng_dev = QueryEngine(backend=JaxBackend(bt=512))
+    eng_host = QueryEngine(backend=JaxBackend(bt=512,
+                                              device_resident=False))
+    for res, ref in zip(eng_dev.execute_batch(sh, qs),
+                        eng_host.execute_batch(sh, qs)):
+        assert sol_rows(res) == sol_rows(ref)
+    dev, host = asdict(eng_dev.stats.join), asdict(eng_host.stats.join)
+    assert dev.pop("joins_device") > 0
+    assert host.pop("joins_device") == 0
+    assert dev == host
+    assert eng_dev.stats.device_queries == len(qs)
+
+
 def test_serving_overlap_matches_sequential():
     from repro.runtime.serving import (OffloadServingPool, Replica,
                                        make_sparql_runner)
