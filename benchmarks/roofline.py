@@ -148,24 +148,41 @@ def query_kernel_rooflines(bench_json: str = "BENCH_engine.json"
     meaningful for compiled TPU runs; CPU interpret mode is a correctness
     tool, not a fast path)."""
     by_name: dict[str, dict] = {}
+    note = ""
     if os.path.exists(bench_json):
-        with open(bench_json) as f:
-            by_name = {r["name"]: r
-                       for r in json.load(f).get("rows", [])}
+        # degrade gracefully on any artifact problem: a truncated write, a
+        # bench run without --kernels, or a schema drift must leave the
+        # section reporting nominal floors with a clear message, never
+        # crash the whole roofline report
+        try:
+            with open(bench_json) as f:
+                payload = json.load(f)
+            by_name = {r["name"]: r for r in payload.get("rows", [])
+                       if isinstance(r, dict) and "name" in r}
+        except (json.JSONDecodeError, OSError) as err:
+            note = f" ({bench_json} unreadable: {err})"
+            by_name = {}
     lines = []
     for name, (bytes_key, default_bytes) in _QUERY_KERNEL_NOMINAL.items():
         rec = by_name.get(name)
         nbytes, achieved_us = default_bytes, None
         if rec is not None:
-            derived = dict(kv.split("=", 1)
-                           for kv in rec["derived"].split("|") if "=" in kv)
-            nbytes = int(derived.get(bytes_key, default_bytes))
-            achieved_us = float(rec["us_per_call"])
+            try:
+                derived = rec.get("derived", {})
+                if isinstance(derived, str):
+                    derived = dict(kv.split("=", 1)
+                                   for kv in derived.split("|") if "=" in kv)
+                nbytes = int(derived.get(bytes_key, default_bytes))
+                achieved_us = float(rec["us_per_call"])
+            except (KeyError, TypeError, ValueError, AttributeError):
+                nbytes, achieved_us = default_bytes, None
+                note = note or (f" ({bench_json} row {name!r} "
+                                "unparseable; using nominal sizes)")
         floor_us = nbytes / HBM_BW * 1e6
         extra = (f"|achieved_us={achieved_us:.1f}"
                  f"|frac_of_peak={floor_us / achieved_us:.4f}"
                  if achieved_us else
-                 "|achieved=n/a (run bench_engine --kernels first)")
+                 "|achieved=n/a (run bench_engine --kernels first)" + note)
         lines.append(f"roofline_query_{name.removeprefix('kernel_')},"
                      f"{floor_us:.3f},bytes_streamed={nbytes}"
                      f"|hbm_floor_us={floor_us:.3f}{extra}")

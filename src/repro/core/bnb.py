@@ -1,20 +1,27 @@
 """Branch-and-bound for the query-assignment decision (paper Alg. 1).
 
 Search tree: level i decides one EU's placement among {cloud} ∪ {feasible
-edges}. Exactness only requires that every node's lower bound is certified;
-two bounding modes are provided:
+edges} ∪ {partial} (the partial-evaluation option, when the query carries
+one — see :class:`repro.core.cost.PartialOption`). Exactness only requires
+that every node's lower bound is certified; two bounding modes are
+provided:
 
 - ``bound="rqad"`` (paper-faithful): the convex R-QAD relaxation solved in
   JAX with a Frank-Wolfe duality-gap certificate (see ``qad.py``); children
-  of one expansion are bounded in a single vmapped call.
+  of one expansion are bounded in a single vmapped call. The relaxation
+  does not model the partial option, so its bound is corrected by a
+  certified slack (:func:`repro.core.qad.partial_lb_slack`): a row taking
+  its partial option costs at least its congestion-free partial cost, so
+  subtracting ``max(0, cloud_n - partial_free_n)`` per partial-capable row
+  keeps the bound a true lower bound for every completion.
 - ``bound="marginal"`` (beyond-paper, default): a congestion-free completion
   bound. With prefix loads S_k = Σ_{fixed n∈N_k} √c_n, a free user's true
   marginal cost on edge k is ≥ (2·S_k·√c_n + c_n)/F_k + w_n/r^{n,k} because
-  additional free users only increase S_k; taking each free user's cheapest
-  option therefore lower-bounds every completion:
-      LB = cost(prefix) + Σ_{free n} min(w_n/r^{n,c}, min_k marginal_{n,k}).
-  It is O(N·K) NumPy per node — no accelerator round-trip — and *tighter*
-  than the LP-style relaxation deep in the tree.
+  additional free users only increase S_k; the same telescoping argument
+  prices a free user's partial option at
+  ≥ Σ_k (2·S_k·P_sq_{n,k} + P_c_{n,k})/F_k + fixed_n. Taking each free
+  user's cheapest option therefore lower-bounds every completion. The
+  partial option adds one more column — greedy and bounding stay O(N·K).
 
 Upper bounds come from greedy completion of the prefix (and, in rqad mode,
 additionally from Eq. 17 rounding), evaluated exactly through the CRA closed
@@ -25,6 +32,11 @@ Further beyond-paper optimizations (measured in bench_sched_overhead.py):
 - users are branched in descending *impact* order (max feasible saving);
 - single-choice users are collapsed instead of branched;
 - greedy warm start for the incumbent (paper uses cloud-only; configurable).
+
+Decision encoding: -1 cloud, 0..K-1 edge, K partial. In the returned
+``D`` matrix a partial row is all-zero (legacy consumers read it as cloud,
+which is also the execution fallback direction); the ``partial`` boolean
+mask on :class:`BnBResult` is authoritative.
 """
 
 from __future__ import annotations
@@ -36,7 +48,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .cost import QueryTasks, SystemParams, assignment_cost
+from .cost import (QueryTasks, SystemParams, assignment_cost,
+                   cloud_unit_cost, decisions_cost, partial_fixed_cost)
 from .cra import allocate_closed_form
 
 
@@ -44,11 +57,12 @@ from .cra import allocate_closed_form
 class BnBResult:
     D: np.ndarray                 # [N, K] binary assignment
     f: np.ndarray                 # [N, K] allocated cycles/s
-    objective: float              # total cost (Eq. 5, with optimal CRA)
+    objective: float              # total cost (Eq. 5 gen., optimal CRA)
     nodes_explored: int
     nodes_pruned: int
     solve_seconds: float
     optimal: bool                 # False if the node cap was hit
+    partial: np.ndarray | None = None   # [N] bool: row takes its partial plan
 
 
 class _Instance:
@@ -66,22 +80,44 @@ class _Instance:
             self.tx_edge = np.where(
                 self.e > 0, self.w[:, None] / np.maximum(params.r_edge, 1e-30),
                 np.inf)
-        self.tx_cloud = self.w / params.r_cloud
+        # cloud path: delivery + (generalized) cloud compute
+        self.cloud = cloud_unit_cost(tasks, params).astype(np.float64)
+        # partial option arrays (zero / inf when a row has none)
+        self.has_partial = np.zeros(self.N, dtype=bool)
+        self.P_sq = np.zeros((self.N, self.K))
+        self.P_c = np.zeros((self.N, self.K))
+        self.part_fixed = np.full(self.N, np.inf)
+        if tasks.partial is not None:
+            for n, opt in enumerate(tasks.partial):
+                if opt is None:
+                    continue
+                eids = np.asarray(opt.edges, dtype=np.int64)
+                cyc = np.maximum(np.asarray(opt.cycles, dtype=np.float64), 0.0)
+                self.has_partial[n] = True
+                self.P_c[n, eids] = cyc
+                self.P_sq[n, eids] = np.sqrt(cyc)
+                self.part_fixed[n] = partial_fixed_cost(
+                    opt, float(self.w[n]), params, n)
         # alone-on-the-edge saving per user: branching impact
         alone = self.c[:, None] / self.F[None, :] + self.tx_edge
-        saving = self.tx_cloud[:, None] - alone
+        saving = self.cloud[:, None] - alone
         saving = np.where(self.e > 0, saving, -np.inf)
         impact = saving.max(axis=1)
+        part_alone = (self.P_c / self.F[None, :]).sum(axis=1) + self.part_fixed
+        impact = np.where(self.has_partial,
+                          np.maximum(impact, self.cloud - part_alone), impact)
         if order == "impact":
             self.perm = np.argsort(-impact, kind="stable")
         else:
             self.perm = np.arange(self.N)
         self.inv = np.argsort(self.perm)
         # permuted views
-        for name in ("e", "c", "w", "sq", "tx_edge", "tx_cloud"):
+        for name in ("e", "c", "w", "sq", "tx_edge", "cloud",
+                     "has_partial", "P_sq", "P_c", "part_fixed"):
             setattr(self, name, getattr(self, name)[self.perm])
         self.choices = [
             [-1] + list(np.flatnonzero(self.e[n] > 0))
+            + ([self.K] if self.has_partial[n] else [])
             for n in range(self.N)]
 
     # ---- exact cost of a complete decision vector -------------------------
@@ -89,11 +125,14 @@ class _Instance:
         S = np.zeros(self.K)
         tx = 0.0
         for n, ch in enumerate(decisions):
-            if ch >= 0:
+            if ch == self.K:
+                S += self.P_sq[n]
+                tx += self.part_fixed[n]
+            elif ch >= 0:
                 S[ch] += self.sq[n]
                 tx += self.tx_edge[n, ch]
             else:
-                tx += self.tx_cloud[n]
+                tx += self.cloud[n]
         return float((S ** 2 / self.F).sum() + tx)
 
     # ---- prefix state -------------------------------------------------------
@@ -101,11 +140,14 @@ class _Instance:
         S = np.zeros(self.K)
         tx = 0.0
         for n, ch in enumerate(decisions):
-            if ch >= 0:
+            if ch == self.K:
+                S += self.P_sq[n]
+                tx += self.part_fixed[n]
+            elif ch >= 0:
                 S[ch] += self.sq[n]
                 tx += self.tx_edge[n, ch]
             else:
-                tx += self.tx_cloud[n]
+                tx += self.cloud[n]
         return S, tx
 
     # ---- certified congestion-free lower bound -----------------------------
@@ -117,7 +159,12 @@ class _Instance:
         c = self.c[depth:, None]
         marg = (2.0 * S[None, :] * sq + c) / self.F[None, :] \
             + self.tx_edge[depth:]
-        best = np.minimum(marg.min(axis=1), self.tx_cloud[depth:])
+        best = np.minimum(marg.min(axis=1), self.cloud[depth:])
+        # partial marginal: P_sq/P_c are zero and part_fixed inf for rows
+        # without the option, so pm is inf there and never selected
+        pm = ((2.0 * S[None, :] * self.P_sq[depth:] + self.P_c[depth:])
+              / self.F[None, :]).sum(axis=1) + self.part_fixed[depth:]
+        best = np.minimum(best, pm)
         return base + float(best.sum())
 
     # ---- greedy completion (upper bound + incumbent) ------------------------
@@ -126,24 +173,39 @@ class _Instance:
         out = np.asarray(decisions + [-1] * (self.N - len(decisions)),
                          dtype=np.int64)
         for n in range(len(decisions), self.N):
-            feas = self.choices[n][1:]
-            if not feas:
-                continue
-            feas = np.asarray(feas)
-            delta = ((S[feas] + self.sq[n]) ** 2 - S[feas] ** 2) / self.F[feas]
-            delta += self.tx_edge[n, feas] - self.tx_cloud[n]
-            j = int(np.argmin(delta))
-            if delta[j] < 0.0:
-                out[n] = feas[j]
-                S[feas[j]] += self.sq[n]
+            best_ch, best_delta = -1, 0.0
+            feas = [ch for ch in self.choices[n][1:] if ch != self.K]
+            if feas:
+                feas = np.asarray(feas)
+                delta = ((S[feas] + self.sq[n]) ** 2 - S[feas] ** 2) \
+                    / self.F[feas]
+                delta += self.tx_edge[n, feas] - self.cloud[n]
+                j = int(np.argmin(delta))
+                if delta[j] < best_delta:
+                    best_ch, best_delta = int(feas[j]), float(delta[j])
+            if self.has_partial[n]:
+                pd = float((((S + self.P_sq[n]) ** 2 - S ** 2)
+                            / self.F).sum()
+                           + self.part_fixed[n] - self.cloud[n])
+                if pd < best_delta:
+                    best_ch, best_delta = self.K, pd
+            if best_ch != -1:
+                out[n] = best_ch
+                if best_ch == self.K:
+                    S = S + self.P_sq[n]
+                else:
+                    S[best_ch] += self.sq[n]
         return out
 
     def to_D(self, decisions: np.ndarray) -> np.ndarray:
         D = np.zeros((self.N, self.K))
         for n, ch in enumerate(decisions):
-            if ch >= 0:
+            if 0 <= ch < self.K:
                 D[n, ch] = 1.0
         return D[self.inv]          # undo the impact permutation
+
+    def to_partial_mask(self, decisions: np.ndarray) -> np.ndarray:
+        return (np.asarray(decisions) == self.K)[self.inv]
 
 
 def branch_and_bound(tasks: QueryTasks, params: SystemParams,
@@ -156,9 +218,10 @@ def branch_and_bound(tasks: QueryTasks, params: SystemParams,
                      max_nodes: int = 200_000,
                      max_seconds: float | None = None,
                      prune_tol: float = 1e-9) -> BnBResult:
-    """Alg. 1 (modified): exact minimizer of Eq. (15).
+    """Alg. 1 (modified): exact minimizer of Eq. (15), three-way plan space.
 
-    ``bound="rqad"`` reproduces the paper's relaxation bounding;
+    ``bound="rqad"`` reproduces the paper's relaxation bounding (with the
+    partial-slack correction when partial options exist);
     ``bound="marginal"`` is the fast default (identical optima, certified).
     ``max_nodes`` / ``max_seconds`` turn the solver into an anytime method:
     the greedy-completion incumbent is returned with ``optimal=False`` when
@@ -170,13 +233,17 @@ def branch_and_bound(tasks: QueryTasks, params: SystemParams,
 
     use_rqad = bound == "rqad"
     if use_rqad:
-        from .qad import build_qad_arrays, solve_rqad_batch
+        from .qad import build_qad_arrays, partial_lb_slack, solve_rqad_batch
         A, b, const = build_qad_arrays(
             inst.c, inst.w, inst.e,
             np.where(inst.e > 0, inst.w[:, None] / np.maximum(inst.tx_edge,
                                                               1e-300), 1e-30),
-            inst.w / inst.tx_cloud)
-        # NOTE: r_edge reconstructed from tx_edge to honor the permutation.
+            inst.w / np.maximum(inst.cloud - inst.c / params.F_cloud, 1e-300),
+            cloud_compute=inst.c / params.F_cloud)
+        # NOTE: r_edge / r_cloud reconstructed from the permuted cost
+        # arrays so the relaxation sees the same branching order.
+        part_free = (inst.P_c / inst.F[None, :]).sum(axis=1) + inst.part_fixed
+        rqad_slack = partial_lb_slack(inst.cloud, part_free)
 
     # incumbent
     if warm_start == "greedy":
@@ -230,11 +297,14 @@ def branch_and_bound(tasks: QueryTasks, params: SystemParams,
             S, tx = S_node.copy(), tx_node
             for nd in range(depth, child_depth):
                 ch = dec[nd]
-                if ch >= 0:
+                if ch == K:
+                    S += inst.P_sq[nd]
+                    tx += inst.part_fixed[nd]
+                elif ch >= 0:
                     S[ch] += inst.sq[nd]
                     tx += inst.tx_edge[nd, ch]
                 else:
-                    tx += inst.tx_cloud[nd]
+                    tx += inst.cloud[nd]
             states.append((S, tx))
             lbs[ci] = inst.marginal_lb(S, tx, child_depth)
 
@@ -246,7 +316,7 @@ def branch_and_bound(tasks: QueryTasks, params: SystemParams,
                                  for dec in prefixes])
             D_rel, f_vals, rq_lbs = solve_rqad_batch(
                 A, b, inst.F, inst.e, fixed_mask, fixed_Ds, solver_iters)
-            rq_lbs = np.asarray(rq_lbs) + const
+            rq_lbs = np.asarray(rq_lbs) + const - rqad_slack
             lbs = np.maximum(lbs, rq_lbs)
 
         for ci, dec in enumerate(prefixes):
@@ -269,18 +339,25 @@ def branch_and_bound(tasks: QueryTasks, params: SystemParams,
                                   S_c, tx_c))
 
     D = inst.to_D(best_dec)
+    part = inst.to_partial_mask(best_dec)
     e_full = (tasks.e * params.assoc).astype(np.float64)
     f = allocate_closed_form(D * e_full, tasks.c, params.F)
-    obj = assignment_cost(D, tasks, params)
+    if part.any():
+        obj = decisions_cost(np.asarray(best_dec)[inst.inv], tasks, params)
+    else:
+        obj = assignment_cost(D, tasks, params)
     return BnBResult(D=D, f=f, objective=float(obj),
                      nodes_explored=explored, nodes_pruned=pruned,
-                     solve_seconds=time.perf_counter() - t0, optimal=optimal)
+                     solve_seconds=time.perf_counter() - t0, optimal=optimal,
+                     partial=part)
 
 
 def _decisions_to_D(decisions: list[int], N: int, K: int) -> np.ndarray:
+    # a partial decision (ch == K) maps to an all-zero row: the relaxation
+    # prices it as cloud, which the partial slack correction accounts for
     D = np.zeros((N, K))
     for n, ch in enumerate(decisions):
-        if ch >= 0:
+        if 0 <= ch < K:
             D[n, ch] = 1.0
     return D
 
@@ -290,16 +367,21 @@ def brute_force(tasks: QueryTasks, params: SystemParams) -> BnBResult:
     t0 = time.perf_counter()
     N, K = tasks.N, params.K
     e = (tasks.e * params.assoc).astype(np.float64)
-    choices = [[-1] + list(np.flatnonzero(e[n] > 0)) for n in range(N)]
-    best_cost, best_D = np.inf, np.zeros((N, K))
+    choices = [[-1] + list(np.flatnonzero(e[n] > 0))
+               + ([K] if tasks.partial_option(n) is not None else [])
+               for n in range(N)]
+    best_cost, best_combo = np.inf, tuple([-1] * N)
     n_nodes = 0
     for combo in itertools.product(*choices):
         n_nodes += 1
-        D = _decisions_to_D(list(combo), N, K)
-        cost = assignment_cost(D, tasks, params)
+        cost = decisions_cost(np.asarray(combo, dtype=np.int64),
+                              tasks, params)
         if cost < best_cost:
-            best_cost, best_D = cost, D
+            best_cost, best_combo = cost, combo
+    best_D = _decisions_to_D(list(best_combo), N, K)
+    part = np.asarray(best_combo, dtype=np.int64) == K
     f = allocate_closed_form(best_D * e, tasks.c, params.F)
     return BnBResult(D=best_D, f=f, objective=float(best_cost),
                      nodes_explored=n_nodes, nodes_pruned=0,
-                     solve_seconds=time.perf_counter() - t0, optimal=True)
+                     solve_seconds=time.perf_counter() - t0, optimal=True,
+                     partial=part)

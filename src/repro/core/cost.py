@@ -5,7 +5,19 @@ with c_n CPU cycles and w_n result bits; downlink rates r^{n,k} (edge->user,
 OFDMA model Eq. 4) and r^{n,c} (cloud->user); edge compute capacity F_k.
 
 Costs:  edge  O_e^{n,k} = c_n / f_{n,k} + w_n / r^{n,k}
-        cloud O_c^{n}   = w_n / r^{n,c}           (cloud compute ~ free)
+        cloud O_c^{n}   = w_n / r^{n,c} + c_n / F_cloud
+        partial O_p^{n} = Σ_e (c_e/f_e + b_e/r_bh^e) + a_n/F_cloud
+                          + w_n / r^{n,c}
+
+The paper's Eq. 5 treats cloud compute as free (F_cloud = inf, the
+default). The generalized model adds two optional knobs: ``F_cloud``
+(finite = congested / metered cloud CPU) and per-edge backhaul rates
+``r_backhaul`` (edge -> assembler uplink), which together price the
+*partial-evaluation* plan: each contributing edge e computes its
+resident-leaf fragment (c_e cycles, joining edge e's CRA pool), ships a
+dictionary-free binding table of b_e bits over the backhaul, and the
+cloud assembles (a_n cycles) and delivers the final w_n bits over the
+user's cloud link.
 """
 
 from __future__ import annotations
@@ -36,12 +48,21 @@ class SystemParams:
     r_edge:   [N, K] downlink rate ES_k -> EU_n, bits/s
     r_cloud:  [N] downlink rate cloud -> EU_n, bits/s
     assoc:    [N, K] bool, EU_n physically associated with ES_k
+
+    Generalized-Eq.-5 extensions (both default to the paper's model):
+
+    r_backhaul: [K] uplink rate ES_k -> cloud assembler, bits/s, or None
+                (None -> DEFAULT_BACKHAUL_BPS for every edge)
+    F_cloud:    cloud compute capacity in cycles/s; np.inf == the paper's
+                free-cloud-compute assumption (legacy behaviour)
     """
 
     F: np.ndarray
     r_edge: np.ndarray
     r_cloud: np.ndarray
     assoc: np.ndarray
+    r_backhaul: np.ndarray | None = None
+    F_cloud: float = np.inf
 
     @property
     def N(self) -> int:
@@ -51,13 +72,24 @@ class SystemParams:
     def K(self) -> int:
         return len(self.F)
 
+    @property
+    def backhaul(self) -> np.ndarray:
+        """[K] effective edge->assembler uplink rates, bits/s."""
+        if self.r_backhaul is None:
+            return np.full(self.K, DEFAULT_BACKHAUL_BPS)
+        return np.asarray(self.r_backhaul, dtype=np.float64)
+
     @classmethod
     def synthetic(cls, n_users: int, n_edges: int, seed: int = 0,
                   edge_mbps: float = 75.0, cloud_mbps: float = 5.0,
                   f_ghz: float = 0.2, multi_assoc_frac: float = 0.8,
+                  backhaul_mbps: float = 150.0,
+                  cloud_ghz: float | None = None,
                   ) -> "SystemParams":
         """Paper §5.1 defaults: edge link ~70-80 Mbps, cloud ~5 Mbps,
-        0.2 GHz edge CPUs; ~20% of users see one ES, the rest several."""
+        0.2 GHz edge CPUs; ~20% of users see one ES, the rest several.
+        ``cloud_ghz=None`` keeps the paper's free cloud compute;
+        ``backhaul_mbps`` prices partial binding-table egress."""
         rng = np.random.default_rng(seed)
         F = np.full(n_edges, f_ghz * 1e9)
         # association: every user gets >=1 ES; multi-assoc users get 2-3
@@ -76,25 +108,89 @@ class SystemParams:
         r_edge = (edge_mbps * 1e6) * rng.uniform(0.9, 1.1, (n_users, n_edges))
         r_edge = np.where(assoc, r_edge, 0.0)
         r_cloud = (cloud_mbps * 1e6) * rng.uniform(0.9, 1.1, n_users)
-        return cls(F=F, r_edge=r_edge, r_cloud=r_cloud, assoc=assoc)
+        r_bh = (backhaul_mbps * 1e6) * rng.uniform(0.9, 1.1, n_edges)
+        return cls(F=F, r_edge=r_edge, r_cloud=r_cloud, assoc=assoc,
+                   r_backhaul=r_bh,
+                   F_cloud=np.inf if cloud_ghz is None else cloud_ghz * 1e9)
+
+
+@dataclass
+class PartialOption:
+    """A candidate partial-evaluation plan for one query (Eq. 5 gen.).
+
+    edges:           [m] int edge server ids contributing fragments
+    cycles:          [m] estimated fragment cycles per contributing edge
+                     (joins that edge's CRA pool when the option is taken)
+    ship_bits:       [m] estimated binding-table egress bits per edge
+    assemble_cycles: cloud-side work: residual (non-resident) fragments +
+                     the compatibility joins over the shipped tables
+    plan:            opaque executable plan (sparql.partial_eval.PartialPlan)
+    """
+
+    edges: np.ndarray
+    cycles: np.ndarray
+    ship_bits: np.ndarray
+    assemble_cycles: float
+    plan: object | None = None
 
 
 @dataclass
 class QueryTasks:
-    """Per-query parameters + executability matrix E (Eq. 2)."""
+    """Per-query parameters + executability matrix E (Eq. 2).
+
+    ``partial``: optional [N] list of :class:`PartialOption` or None per
+    query — the three-way plan space {full-edge, cloud, partial}. When the
+    whole list is None (default) scheduling is the paper's binary model.
+    """
 
     c: np.ndarray          # [N] cycles
     w: np.ndarray          # [N] bits
     e: np.ndarray          # [N, K] {0,1}
+    partial: list | None = None
 
     @property
     def N(self) -> int:
         return len(self.c)
 
+    def partial_option(self, n: int) -> PartialOption | None:
+        return self.partial[n] if self.partial is not None else None
+
 
 # ---------------------------------------------------------------------------
-# cost evaluation (Eq. 5 / Eq. 10)
+# cost evaluation (Eq. 5 / Eq. 10, generalized to multi-server plans)
 # ---------------------------------------------------------------------------
+
+DEFAULT_BACKHAUL_BPS = 150e6   # edge -> cloud assembler uplink default
+
+
+def cloud_unit_cost(tasks: QueryTasks, params: SystemParams) -> np.ndarray:
+    """[N] per-query cloud-path cost: delivery + (optional) cloud compute.
+
+    With the paper's ``F_cloud = inf`` this is exactly ``w / r_cloud``."""
+    return tasks.w / params.r_cloud + tasks.c / params.F_cloud
+
+
+def partial_fixed_cost(opt: PartialOption, w_n: float,
+                       params: SystemParams, row: int) -> float:
+    """Congestion-independent terms of a partial plan for user-row ``row``:
+    backhaul egress + cloud assembly + final delivery over the cloud link.
+    The per-edge compute term is congestion-dependent (CRA pool) and is
+    accounted where the assignment is known (see :func:`decisions_cost`)."""
+    bh = params.backhaul[np.asarray(opt.edges, dtype=np.int64)]
+    return float((np.asarray(opt.ship_bits, dtype=np.float64) / bh).sum()
+                 + opt.assemble_cycles / params.F_cloud
+                 + w_n / params.r_cloud[row])
+
+
+def partial_free_cost(opt: PartialOption, w_n: float,
+                      params: SystemParams, row: int) -> float:
+    """Congestion-FREE total partial cost (each fragment alone on its edge:
+    c_e / F_e). Lower-bounds the realized partial cost; used for modeled
+    latency and for the R-QAD slack correction in :mod:`repro.core.bnb`."""
+    F = params.F[np.asarray(opt.edges, dtype=np.int64)]
+    return float((np.asarray(opt.cycles, dtype=np.float64) / F).sum()
+                 + partial_fixed_cost(opt, w_n, params, row))
+
 
 def total_cost(D: np.ndarray, f: np.ndarray, tasks: QueryTasks,
                params: SystemParams) -> float:
@@ -106,7 +202,7 @@ def total_cost(D: np.ndarray, f: np.ndarray, tasks: QueryTasks,
         edge_tx = np.where(De > 0,
                            tasks.w[:, None] / np.maximum(params.r_edge, 1e-30),
                            0.0)
-    cloud = (1.0 - on_edge) * tasks.w / params.r_cloud
+    cloud = (1.0 - on_edge) * cloud_unit_cost(tasks, params)
     return float((De * (edge_comp + edge_tx)).sum() + cloud.sum())
 
 
@@ -120,8 +216,39 @@ def assignment_cost(D: np.ndarray, tasks: QueryTasks,
         edge_tx = np.where(De > 0,
                            tasks.w[:, None] / np.maximum(params.r_edge, 1e-30),
                            0.0).sum()
-    cloud = ((1.0 - De.sum(axis=1)) * tasks.w / params.r_cloud).sum()
+    cloud = ((1.0 - De.sum(axis=1)) * cloud_unit_cost(tasks, params)).sum()
     return float(o_calc + edge_tx + cloud)
+
+
+def decisions_cost(decisions: np.ndarray, tasks: QueryTasks,
+                   params: SystemParams) -> float:
+    """Exact generalized-Eq.-5 cost of a per-query decision vector.
+
+    ``decisions``: [N] ints — edge id in [0, K), -1 for cloud, or K for the
+    query's partial option (requires ``tasks.partial[n]``). Edge-assigned
+    queries AND partial fragments share each edge's CRA pool (Eq. 13):
+    the pool's sqrt-cycles sum S_k prices compute as Σ_k S_k²/F_k.
+    """
+    K = params.K
+    S = np.zeros(K)
+    tx = 0.0
+    sq = np.sqrt(np.maximum(tasks.c, 0.0))
+    cloud = cloud_unit_cost(tasks, params)
+    for n, ch in enumerate(np.asarray(decisions, dtype=np.int64)):
+        if ch == K:
+            opt = tasks.partial_option(int(n))
+            if opt is None:
+                raise ValueError(f"row {n}: partial decision without option")
+            eids = np.asarray(opt.edges, dtype=np.int64)
+            S[eids] += np.sqrt(np.maximum(
+                np.asarray(opt.cycles, dtype=np.float64), 0.0))
+            tx += partial_fixed_cost(opt, float(tasks.w[n]), params, int(n))
+        elif ch >= 0:
+            S[ch] += sq[n]
+            tx += float(tasks.w[n] / params.r_edge[n, ch])
+        else:
+            tx += float(cloud[n])
+    return float((S ** 2 / params.F).sum() + tx)
 
 
 # ---------------------------------------------------------------------------

@@ -135,6 +135,20 @@ class InducedIndex:
             self._memo.clear()
 
 
+def reship_bytes(store: RDFStore, patterns: list[Pattern],
+                 index: "InducedIndex | None" = None) -> int:
+    """Bytes to make a query edge-feasible the all-or-nothing way: ship the
+    ENTIRE induced subgraph ``G[P]`` of its required-leaf patterns to one
+    edge (three int64 columns per triple — the delta wire format). This is
+    the baseline that partial evaluation's ``partial_bytes_shipped`` is
+    gated against (``bench_engine --partial``)."""
+    if index is not None:
+        eids = index.union_edge_ids(store, patterns)
+    else:
+        eids = induced_edge_ids(store, patterns)
+    return int(len(eids) * 3 * np.dtype(np.int64).itemsize)
+
+
 def induced_subgraph(store: RDFStore, patterns: list[Pattern],
                      method: str = "exact") -> RDFStore:
     if method == "exact":

@@ -27,6 +27,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from functools import cached_property
 
+import numpy as np
+
 from ..sparql.query import QueryGraph
 
 VAR_PRED_LABEL = -2
@@ -119,6 +121,68 @@ def feasibility_patterns(q) -> list[Pattern] | None:
             return None
         pats.append(pattern_of(leaf.query))
     return pats or None
+
+
+@dataclass
+class LeafResidency:
+    """Per-required-leaf residency report — the refactor of the
+    all-or-nothing edge-executable boolean into *which* leaves live where.
+
+    leaves:   required leaf :class:`QueryGraph`\\ s (``bgp_leaves`` order)
+    leaf_idx: index of each into the plan's full ``bgp_leaves()`` list;
+              ``[-1]`` for a plain :class:`QueryGraph` (the query itself)
+    resident: [L, K'] bool — ``leaves[i]``'s whole-leaf pattern is
+              isomorphic to a pattern resident at ``servers[j]``
+    servers:  the server ids the columns of ``resident`` refer to
+    """
+
+    leaves: list
+    leaf_idx: list[int]
+    resident: np.ndarray
+    servers: list[int]
+
+    def covered_servers(self) -> list[int]:
+        """Servers holding EVERY required leaf (the legacy e[n,k] == 1)."""
+        full = self.resident.all(axis=0)
+        return [s for s, ok in zip(self.servers, full) if ok]
+
+
+def leaf_residency(q, edge_servers) -> LeafResidency | None:
+    """Report which required leaves of ``q`` are resident per edge server.
+
+    Same certification rules as :func:`feasibility_patterns` (whole-leaf
+    pattern isomorphism against each server's index; OPTIONAL right sides
+    excluded), but instead of collapsing to one boolean per edge it keeps
+    the [leaf x server] matrix — the input the partial-evaluation planner
+    (:mod:`repro.sparql.partial_eval`) needs to split a query across a set
+    of contributing edges. ``edge_servers`` only need ``server_id`` and
+    ``can_execute(pattern)``. Returns ``None`` when residency cannot be
+    certified at all (disconnected required leaf / nothing required).
+    """
+    leaves = getattr(q, "bgp_leaves", None)
+    if leaves is None:
+        if not q.patterns or not q.is_weakly_connected():
+            return None
+        qs, idxs = [q], [-1]
+    else:
+        required = {id(leaf) for leaf in q.bgp_leaves(required_only=True)}
+        qs, idxs = [], []
+        for i, leaf in enumerate(q.bgp_leaves()):
+            if id(leaf) not in required or not leaf.query.patterns:
+                continue
+            if not leaf.query.is_weakly_connected():
+                return None
+            qs.append(leaf.query)
+            idxs.append(i)
+        if not qs:
+            return None
+    resident = np.zeros((len(qs), len(edge_servers)), dtype=bool)
+    for i, lq in enumerate(qs):
+        p = pattern_of(lq)
+        for j, es in enumerate(edge_servers):
+            resident[i, j] = bool(es.can_execute(p))
+    return LeafResidency(leaves=qs, leaf_idx=idxs, resident=resident,
+                         servers=[es.server_id for es in edge_servers])
 
 
 def observed_patterns(q) -> list[Pattern]:

@@ -32,14 +32,38 @@ import numpy as np
 
 def build_qad_arrays(c: np.ndarray, w: np.ndarray, e: np.ndarray,
                      r_edge: np.ndarray, r_cloud: np.ndarray,
+                     cloud_compute: np.ndarray | None = None,
                      ) -> tuple[np.ndarray, np.ndarray, float]:
-    """(A, b, const) for the objective above. Arrays are [N, K]."""
+    """(A, b, const) for the objective above. Arrays are [N, K].
+
+    ``cloud_compute``: optional [N] per-query cloud compute cost c_n/F_cloud
+    (the generalized Eq. 5); it joins the per-row cloud cost both in the
+    relative edge gains ``b`` and in the constant term."""
+    cloud = w / r_cloud
+    if cloud_compute is not None:
+        cloud = cloud + np.asarray(cloud_compute, dtype=np.float64)
     A = e * np.sqrt(np.maximum(c, 0.0))[:, None]
     with np.errstate(divide="ignore"):
         edge_tx = np.where(e > 0, w[:, None] / np.maximum(r_edge, 1e-30), 0.0)
-    b = e * (edge_tx - (w / r_cloud)[:, None])
-    const = float((w / r_cloud).sum())
+    b = e * (edge_tx - cloud[:, None])
+    const = float(cloud.sum())
     return A.astype(np.float64), b.astype(np.float64), const
+
+
+def partial_lb_slack(cloud_cost: np.ndarray,
+                     partial_free_cost: np.ndarray) -> float:
+    """Certified correction keeping the R-QAD lower bound sound when rows
+    carry a partial-evaluation option the relaxation cannot represent.
+
+    The relaxation prices a non-edge row at its cloud cost; a row actually
+    taking its partial plan pays at least its congestion-free partial cost
+    (edge compute alone-on-the-edge + fixed backhaul/assembly/delivery,
+    since (S² − (S−s)²)/F ≥ s²/F = c/F). Subtracting
+    ``Σ_n max(0, cloud_n − partial_free_n)`` therefore lower-bounds every
+    completion that swaps any subset of rows from cloud to partial. Rows
+    without the option carry ``partial_free_cost = inf`` and contribute 0.
+    """
+    return float(np.maximum(0.0, cloud_cost - partial_free_cost).sum())
 
 
 def _project_rows(x: jnp.ndarray, e: jnp.ndarray,

@@ -28,6 +28,7 @@ class ScheduleResult:
     objective: float
     policy: str
     info: dict[str, Any]
+    partial: np.ndarray | None = None   # [N] bool: row takes its partial plan
 
 
 def schedule(tasks: QueryTasks, params: SystemParams, policy: str = "bnb",
@@ -39,7 +40,8 @@ def schedule(tasks: QueryTasks, params: SystemParams, policy: str = "bnb",
                               info={"nodes_explored": r.nodes_explored,
                                     "nodes_pruned": r.nodes_pruned,
                                     "solve_seconds": r.solve_seconds,
-                                    "optimal": r.optimal})
+                                    "optimal": r.optimal},
+                              partial=r.partial)
     if policy in BASELINES:
         D = BASELINES[policy](tasks, params, **kw)
         De = D * tasks.e * params.assoc

@@ -54,7 +54,9 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..core.cost import (QueryTasks, SystemParams, estimate_query_cost)
+from ..core.cost import (CYCLES_BASE, CYCLES_PER_ROW, BITS_PER_CELL,
+                         PartialOption, QueryTasks, SystemParams,
+                         estimate_query_cost, partial_free_cost)
 from ..core.induced import InducedIndex
 from ..core.pattern import (Pattern, feasibility_patterns,
                             observed_patterns)
@@ -64,9 +66,15 @@ from ..rdf.graph import RDFStore
 from ..sparql.algebra import compile_query
 from ..sparql.engine import QueryEngine
 from ..sparql.matcher import MatchResult
+from ..sparql.partial_eval import execute_partial_batch, plan_partial
 from ..sparql.query import QueryGraph, parse_query
 from .rebalance import RebalanceHandle, RebalanceManager, RebalanceReport
-from .server import CloudServer, EdgeServer
+from .server import CloudServer, EdgeServer, ExecutionRecord
+
+# ``QueryOutcome.assigned_to`` / batched-round sentinel: the query ran as a
+# PARTIAL plan — resident-leaf fragments at several edges, assembly at the
+# cloud (see repro.sparql.partial_eval). -1 remains whole-query cloud.
+PARTIAL = -2
 
 
 # Fork-inheritance slots for process-mode overlapped rounds: the parent sets
@@ -169,12 +177,15 @@ def _round_worker(task):
 @dataclass
 class QueryOutcome:
     user: int
-    assigned_to: int              # -1 == cloud, else edge server id
+    assigned_to: int              # -1 cloud, -2 partial, else edge server id
     modeled_latency: float        # paper cost model w/ ESTIMATED (c, w)
     realized_latency: float       # paper cost model w/ MEASURED result size
     measured_exec_seconds: float  # actual matcher wall time
     n_matches: int
     executable_edges: list[int]
+    # multi-server (partial-evaluation) assignments only:
+    partial_servers: tuple = ()   # edges that contributed fragments
+    shipped_bits: float = 0.0     # binding-table egress over the backhaul
 
 
 @dataclass
@@ -194,6 +205,12 @@ class RoundReport:
     # ``run_round_batched(collect_results=True)`` (the serving front end
     # needs the bindings, not just the accounting records)
     results: list | None = None
+    # partial-evaluation accounting (batched rounds only): queries that ran
+    # as multi-edge partial plans, their total dictionary-free binding-table
+    # egress, and plans that fell back to the cloud on a stale placement
+    partial_queries: int = 0
+    partial_bytes_shipped: int = 0
+    partial_fallbacks: int = 0
 
     @property
     def total_modeled_latency(self) -> float:
@@ -221,7 +238,12 @@ class EdgeCloudSystem:
                  storage_budgets: np.ndarray | int,
                  backend: str = "numpy",
                  engine: QueryEngine | None = None,
-                 shard_budgets=None) -> None:
+                 shard_budgets=None,
+                 enable_partial: bool = True) -> None:
+        # three-way scheduling {edge, cloud, partial}: batched rounds may
+        # split a cloud-bound query's resident leaves across several edges
+        # (repro.sparql.partial_eval); False restores the binary paper model
+        self.enable_partial = bool(enable_partial)
         # one engine serves cloud + all edges: its result cache keys embed
         # the store version, so entries from different stores never collide
         self.engine = engine or QueryEngine(backend=backend)
@@ -359,8 +381,53 @@ class EdgeCloudSystem:
         self.construction_seconds = time.perf_counter() - t0
 
     # -- the online path ------------------------------------------------------
+    def _plan_partial_option(self, user: int, q, w_n: float,
+                             ) -> PartialOption | None:
+        """Estimate the generalized-Eq.-5 partial option for one query.
+
+        Plans the fragment split (:func:`repro.sparql.partial_eval.
+        plan_partial`) over the user's associated edges, then prices it:
+        per-edge fragment cycles/result bits are estimated against that
+        edge's (much smaller) G[P] store; residual + OPTIONAL fragments and
+        the compatibility joins are cloud-side assembly cycles. Returns
+        None when no edge can contribute. Caller holds the placement lock.
+        """
+        servers = [es for es in self.edges
+                   if self.params.assoc[user, es.server_id]
+                   and es.store is not None]
+        if not servers:
+            return None
+        plan = plan_partial(q, servers)
+        if plan is None:
+            return None
+        by_id = {es.server_id: es for es in servers}
+        cycles: dict[int, float] = {}
+        bits: dict[int, float] = {}
+        assemble = CYCLES_BASE
+        for frag in plan.fragments:
+            store = (self.cloud.store if frag.server_id < 0
+                     else by_id[frag.server_id].store)
+            c_f, w_f = estimate_query_cost(store, frag.query)
+            if frag.server_id < 0:
+                assemble += c_f          # residual runs at the assembler
+            else:
+                cycles[frag.server_id] = cycles.get(frag.server_id, 0) + c_f
+                bits[frag.server_id] = bits.get(frag.server_id, 0) + w_f
+        # the compatibility joins + final operators: work proportional to
+        # the estimated result rows (same calibration as measured costs)
+        n_proj = max(1, len(q.projection) if getattr(q, "projection", None)
+                     else len(getattr(q, "variables", [])) or 1)
+        assemble += CYCLES_PER_ROW * (w_n / (BITS_PER_CELL * n_proj))
+        eids = np.array(sorted(cycles), dtype=np.int64)
+        return PartialOption(
+            edges=eids,
+            cycles=np.array([cycles[k] for k in eids], dtype=np.float64),
+            ship_bits=np.array([bits[k] for k in eids], dtype=np.float64),
+            assemble_cycles=float(assemble), plan=plan)
+
     def build_tasks(self, queries: list[tuple[int, QueryGraph]],
-                    cost_source: str = "estimate") -> QueryTasks:
+                    cost_source: str = "estimate",
+                    include_partial: bool = False) -> QueryTasks:
         """(c, w, e) for a batch of (user, query) pairs (Eq. 2 via index).
 
         ``queries`` may mix plain :class:`QueryGraph`\\ s and compiled
@@ -373,11 +440,17 @@ class EdgeCloudSystem:
         Taken under the placement lock so the feasibility matrix ``e_nk``
         snapshots ONE placement epoch — it can never mix pre- and
         post-rebalance residency across rows.
+
+        ``include_partial=True`` (and ``enable_partial``) additionally
+        plans a :class:`PartialOption` for every query NO single edge can
+        fully serve — the three-way {edge, cloud, partial} plan space the
+        B&B scheduler prices via the generalized Eq. 5.
         """
         N = len(queries)
         c = np.zeros(N)
         w = np.zeros(N)
         e = np.zeros((N, self.params.K))
+        partial: list | None = None
         with self._placement_lock:
             for i, (user, q) in enumerate(queries):
                 c[i], w[i] = estimate_query_cost(self.cloud.store, q)
@@ -388,20 +461,32 @@ class EdgeCloudSystem:
                     if self.params.assoc[user, es.server_id] and \
                             all(es.can_execute(p) for p in pats):
                         e[i, es.server_id] = 1.0
-        return QueryTasks(c=c, w=w, e=e)
+            if include_partial and self.enable_partial:
+                partial = [None] * N
+                for i, (user, q) in enumerate(queries):
+                    if e[i].sum() == 0:   # full-edge already dominates
+                        partial[i] = self._plan_partial_option(
+                            user, q, float(w[i]))
+                if not any(p is not None for p in partial):
+                    partial = None
+        return QueryTasks(c=c, w=w, e=e, partial=partial)
 
     def _schedule_round(self, queries: list[tuple[int, QueryGraph]],
                         policy: str, sched_kw: dict,
+                        include_partial: bool = False,
                         ) -> tuple[QueryTasks, SystemParams,
                                    ScheduleResult, float]:
-        tasks = self.build_tasks(queries)
-        # user->link rows: task i belongs to user queries[i][0]
+        tasks = self.build_tasks(queries, include_partial=include_partial)
+        # user->link rows: task i belongs to user queries[i][0]; backhaul
+        # rates are per-EDGE uplinks, so they pass through un-sliced
         users = [u for (u, _) in queries]
         params_batch = SystemParams(
             F=self.params.F,
             r_edge=self.params.r_edge[users],
             r_cloud=self.params.r_cloud[users],
             assoc=self.params.assoc[users],
+            r_backhaul=self.params.r_backhaul,
+            F_cloud=self.params.F_cloud,
         )
         if policy == "bnb":
             # anytime budget: at paper scale (K=4, N=20) optimality is
@@ -432,7 +517,52 @@ class EdgeCloudSystem:
         if k >= 0:
             f = max(sr.f[i, k], 1e-30)
             return c_real / f + rec.result_bits / params_batch.r_edge[i, k]
-        return rec.result_bits / params_batch.r_cloud[i]
+        # generalized cloud path: delivery + (finite-F_cloud) compute;
+        # with the paper's free cloud (F_cloud = inf) the term vanishes
+        return (rec.result_bits / params_batch.r_cloud[i]
+                + c_real / params_batch.F_cloud)
+
+    def _realized_partial_latency(self, pe, rec, i: int,
+                                  params_batch: SystemParams) -> float:
+        # generalized Eq. 5 with MEASURED per-edge rows and egress bits:
+        # fragment compute per contributing edge, binding-table shipping
+        # over each edge's backhaul, row-proportional assembly at the
+        # cloud, final delivery over the user's cloud link
+        from ..core.cost import CYCLES_BASE, CYCLES_PER_ROW
+        bh = params_batch.backhaul
+        t = 0.0
+        for sid, rows in pe.per_server_rows.items():
+            if sid >= 0:
+                t += (CYCLES_BASE + CYCLES_PER_ROW * max(rows, 1)
+                      ) / self.params.F[sid]
+        for sid, bits in pe.per_server_bits.items():
+            t += bits / bh[sid]
+        t += (CYCLES_BASE + CYCLES_PER_ROW * max(rec.n_matches, 1)
+              ) / params_batch.F_cloud
+        return float(t + rec.result_bits / params_batch.r_cloud[i])
+
+    def explain_assignment(self, q, user: int = 0) -> str:
+        """Dry-run the scheduler for one query and render the chosen plan
+        kind — ``edge ESk`` / ``cloud`` / ``partial`` — plus, for partial,
+        the per-server leaf split (used by ``SparqlEndpoint.explain``)."""
+        with self._placement_lock:
+            tasks, params_batch, sr, _ = self._schedule_round(
+                [(user, q)], "bnb", {}, include_partial=True)
+        opt = tasks.partial_option(0)
+        if sr.partial is not None and sr.partial[0] and opt is not None:
+            lines = ["assignment: partial "
+                     f"(edges {np.asarray(opt.edges).tolist()} -> cloud "
+                     "assembler)"]
+            lines += ["  " + s for s in opt.plan.describe()]
+            return "\n".join(lines)
+        De = sr.D[0] * tasks.e[0]
+        k = int(De.argmax()) if De.sum() > 0 else -1
+        if k >= 0:
+            return (f"assignment: edge ES{k} "
+                    "(every required leaf resident)")
+        why = (" (partial option available but estimated dearer)"
+               if opt is not None else "")
+        return "assignment: cloud" + why
 
     def run_round(self, queries: list[tuple[int, QueryGraph]],
                   policy: str = "bnb", execute: bool = True,
@@ -460,7 +590,8 @@ class EdgeCloudSystem:
                 modeled = (tasks.c[i] / max(f, 1e-30)
                            + tasks.w[i] / params_batch.r_edge[i, k])
             else:
-                modeled = tasks.w[i] / params_batch.r_cloud[i]
+                modeled = (tasks.w[i] / params_batch.r_cloud[i]
+                           + tasks.c[i] / params_batch.F_cloud)
             n_matches, wall = 0, 0.0
             realized = modeled
             if execute:
@@ -536,16 +667,20 @@ class EdgeCloudSystem:
                                   overlap, max_workers, collect_results,
                                   sched_kw) -> RoundReport:
         tasks, params_batch, sr, sched_dt = self._schedule_round(
-            queries, policy, sched_kw)
+            queries, policy, sched_kw, include_partial=True)
 
-        # assignment per query, then group into one batch per server
+        # assignment per query (edge k, cloud -1, or PARTIAL), then group
+        # the single-server rows into one batch per server
         assigned: list[int] = []
-        counts: dict[int, int] = {}
         for i in range(len(queries)):
+            opt = tasks.partial_option(i)
+            if (sr.partial is not None and sr.partial[i] and opt is not None
+                    and opt.plan is not None):
+                assigned.append(PARTIAL)
+                continue
             De = sr.D[i] * tasks.e[i]
             k = int(De.argmax()) if De.sum() > 0 else -1
             assigned.append(k)
-            counts[k] = counts.get(k, 0) + 1
 
         mode = resolve_overlap_mode(overlap, self.engine.backend.name)
         if mode == "process":
@@ -565,10 +700,13 @@ class EdgeCloudSystem:
                                 else None)
         server_wall: dict[int, float] = {}
         exec_wall = 0.0
+        partial_idx = [i for i, k in enumerate(assigned) if k == PARTIAL]
+        partial_exec: dict[int, object] = {}
         if execute:
             by_server: dict[int, list[int]] = {}
             for i, k in enumerate(assigned):
-                by_server.setdefault(k, []).append(i)
+                if k != PARTIAL:
+                    by_server.setdefault(k, []).append(i)
 
             def run_server(k: int, idxs: list[int]):
                 batch = [queries[i][1] for i in idxs]
@@ -600,24 +738,66 @@ class EdgeCloudSystem:
             else:
                 done = [run_server(k, idxs)
                         for k, idxs in by_server.items()]
+            if partial_idx:
+                # partial plans run in the coordinating process (fragment
+                # batches are per-edge engine batches inside): their store
+                # versions are re-verified there, so a rebalance that
+                # slipped between scheduling and execution degrades to a
+                # whole-query cloud fallback instead of a stale assembly
+                pex = execute_partial_batch(
+                    [tasks.partial_option(i).plan for i in partial_idx],
+                    self.cloud.store, self.engine,
+                    {es.server_id: es for es in self.edges})
+                for i, pe in zip(partial_idx, pex):
+                    partial_exec[i] = pe
             exec_wall = time.perf_counter() - t_exec
             for k, recs, dt in done:
                 server_wall[k] = dt
                 for i, rec in zip(by_server[k], recs):
                     records[i] = rec
+            for i, pe in partial_exec.items():
+                if pe.fallback:
+                    assigned[i] = -1   # ran whole at the cloud; say so
+                wall = sum(pe.per_server_seconds.values())
+                records[i] = ExecutionRecord.of(
+                    pe.result, list(queries[i][1].projection), wall)
+                if collect_results:
+                    results[i] = pe.result
+                for sid, dts in pe.per_server_seconds.items():
+                    server_wall[sid] = server_wall.get(sid, 0.0) + dts
+
+        # counts reflect what actually RAN (stale partial plans fell back
+        # to the cloud above and were reassigned)
+        counts: dict[int, int] = {}
+        for k in assigned:
+            counts[k] = counts.get(k, 0) + 1
 
         outcomes: list[QueryOutcome] = []
         for i, (user, q) in enumerate(queries):
             k = assigned[i]
-            if k >= 0:
+            pe = partial_exec.get(i)
+            p_servers: tuple = ()
+            p_bits = 0.0
+            rec = records[i]
+            if k == PARTIAL:
+                modeled = partial_free_cost(tasks.partial_option(i),
+                                            float(tasks.w[i]), params_batch,
+                                            i)
+                if pe is not None:
+                    p_servers, p_bits = pe.servers, pe.shipped_bits
+            elif k >= 0:
                 modeled = (tasks.c[i] / max(sr.f[i, k], 1e-30)
                            + tasks.w[i] / params_batch.r_edge[i, k])
             else:
-                modeled = tasks.w[i] / params_batch.r_cloud[i]
-            rec = records[i]
+                modeled = (tasks.w[i] / params_batch.r_cloud[i]
+                           + tasks.c[i] / params_batch.F_cloud)
             if rec is not None:
-                realized = self._realized_latency(rec, i, k, sr,
-                                                  params_batch)
+                if k == PARTIAL:
+                    realized = self._realized_partial_latency(
+                        pe, rec, i, params_batch)
+                else:
+                    realized = self._realized_latency(rec, i, k, sr,
+                                                      params_batch)
                 n_matches, wall = rec.n_matches, rec.wall_seconds
             else:
                 realized, n_matches, wall = modeled, 0, 0.0
@@ -627,7 +807,10 @@ class EdgeCloudSystem:
                 user=user, assigned_to=k, modeled_latency=float(modeled),
                 realized_latency=float(realized),
                 measured_exec_seconds=wall, n_matches=n_matches,
-                executable_edges=np.flatnonzero(tasks.e[i]).tolist()))
+                executable_edges=np.flatnonzero(tasks.e[i]).tolist(),
+                partial_servers=p_servers, shipped_bits=float(p_bits)))
+        shipped_total = sum(pe.shipped_bits for pe in partial_exec.values()
+                            if not pe.fallback)
         return RoundReport(policy=policy, outcomes=outcomes,
                            objective=sr.objective,
                            schedule_seconds=sched_dt,
@@ -636,7 +819,13 @@ class EdgeCloudSystem:
                            overlap_mode=mode if execute else "",
                            execute_wall_seconds=exec_wall,
                            server_wall_seconds=server_wall,
-                           results=results)
+                           results=results,
+                           partial_queries=sum(1 for k in assigned
+                                               if k == PARTIAL),
+                           partial_bytes_shipped=int(shipped_total // 8),
+                           partial_fallbacks=sum(
+                               1 for pe in partial_exec.values()
+                               if pe.fallback))
 
     def rebalance_all(self, use_deltas: bool = True,
                       ) -> dict[int, tuple[int, int]]:

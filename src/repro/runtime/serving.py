@@ -20,8 +20,11 @@ from typing import Callable
 
 import numpy as np
 
-from ..core.cost import QueryTasks, SystemParams
+from ..core.cost import (DEFAULT_BACKHAUL_BPS, PartialOption, QueryTasks,
+                         SystemParams)
 from ..core.scheduler import schedule
+
+PARTIAL = -2   # ServedBatch.assignments sentinel: multi-replica partial plan
 
 
 @dataclass
@@ -37,10 +40,15 @@ class Replica:
 
 @dataclass
 class ServedBatch:
-    assignments: np.ndarray              # [N] replica id or -1 (cloud)
+    assignments: np.ndarray              # [N] replica idx, -1 cloud, -2 partial
     objective: float
     schedule_seconds: float
     responses: list = field(default_factory=list)
+    # partial-plan accounting: requests served by a multi-replica split
+    # (sub-payloads at several replicas, assembled afterwards) and their
+    # total estimated inter-replica egress
+    partial_queries: int = 0
+    partial_bytes_shipped: int = 0
 
 
 class OffloadServingPool:
@@ -56,10 +64,17 @@ class OffloadServingPool:
     """
 
     def __init__(self, replicas: list[Replica], cloud_runner: Callable,
-                 cloud_link_bps: float = 5e6) -> None:
+                 cloud_link_bps: float = 5e6,
+                 cloud_cycles_per_s: float = np.inf,
+                 backhaul_bps: float = DEFAULT_BACKHAUL_BPS) -> None:
         self.replicas = replicas
         self.cloud_runner = cloud_runner
         self.cloud_link_bps = cloud_link_bps
+        # generalized-Eq.-5 knobs: a finite cloud capacity prices cloud
+        # compute (and partial assembly); ``backhaul_bps`` prices the
+        # replica -> assembler egress of partial plans
+        self.cloud_cycles_per_s = float(cloud_cycles_per_s)
+        self.backhaul_bps = float(backhaul_bps)
         self._lock = threading.Lock()
         self.epoch = 0
 
@@ -90,6 +105,22 @@ class OffloadServingPool:
         analogue of ``EdgeCloudSystem.run_round_batched(overlap=True)``.
         Runners must be thread-safe (``make_sparql_runner`` engines are:
         their caches are lock-guarded).
+
+        A request may carry a ``"partial"`` spec — the serving analogue of
+        cloud-edge partial evaluation — giving the scheduler a third,
+        multi-replica option priced by the generalized Eq. 5::
+
+            {"replicas": [replica_id, ...],      # contributing replicas
+             "cycles": [...], "ship_bits": [...],  # per-replica estimates
+             "assemble_cycles": float,           # assembler-side work
+             "payloads": {replica_id: payload},  # per-replica sub-payload
+             "assemble": callable | None}        # sub-results -> response
+
+        When chosen, its row in ``assignments`` is ``PARTIAL`` (-2): each
+        contributing replica runs its sub-payload, and ``assemble`` (or
+        plain collection) combines the sub-results. If any contributing
+        replica has no runner the whole request transparently falls back
+        to the cloud pool with ``payload``.
         """
         N, K = len(requests), len(self.replicas)
         c = np.array([r["cycles"] for r in requests], dtype=np.float64)
@@ -99,29 +130,51 @@ class OffloadServingPool:
         with self._lock:
             classes = [set(rep.classes) for rep in self.replicas]
             runners = [rep.runner for rep in self.replicas]
+        idx_of = {rep.replica_id: j for j, rep in enumerate(self.replicas)}
         e = np.zeros((N, K))
         for i, r in enumerate(requests):
             for j in range(K):
                 if r["class_id"] in classes[j]:
                     e[i, j] = 1.0
+        partial: list | None = [None] * N
+        for i, r in enumerate(requests):
+            spec = r.get("partial")
+            if spec is None or e[i].sum() > 0:   # full-replica dominates
+                continue
+            reps = np.array([idx_of[rid] for rid in spec["replicas"]],
+                            dtype=np.int64)
+            partial[i] = PartialOption(
+                edges=reps,
+                cycles=np.asarray(spec["cycles"], dtype=np.float64),
+                ship_bits=np.asarray(spec["ship_bits"], dtype=np.float64),
+                assemble_cycles=float(spec.get("assemble_cycles", 0.0)),
+                plan=spec)
+        if not any(p is not None for p in partial):
+            partial = None
         params = SystemParams(
             F=np.array([rep.cycles_per_s for rep in self.replicas]),
             r_edge=np.tile(np.array([rep.link_bps
                                      for rep in self.replicas]), (N, 1)),
             r_cloud=np.full(N, self.cloud_link_bps),
             assoc=np.ones((N, K), dtype=bool),
+            r_backhaul=np.full(K, self.backhaul_bps),
+            F_cloud=self.cloud_cycles_per_s,
         )
-        tasks = QueryTasks(c=c, w=w, e=e)
+        tasks = QueryTasks(c=c, w=w, e=e, partial=partial)
         t0 = time.perf_counter()
         sr = schedule(tasks, params, policy=policy, **sched_kw)
         dt = time.perf_counter() - t0
         assign = np.full(N, -1, dtype=np.int64)
         De = sr.D * e
         for i in range(N):
-            if De[i].sum() > 0:
+            if (sr.partial is not None and sr.partial[i]
+                    and tasks.partial_option(i) is not None):
+                assign[i] = PARTIAL
+            elif De[i].sum() > 0:
                 assign[i] = int(De[i].argmax())
 
         responses: list = [None] * N
+        shipped_bits = 0.0
         if execute:
             # a replica with no runner cannot execute anything: route its
             # requests to the cloud *and say so* — assignments must report
@@ -131,6 +184,14 @@ class OffloadServingPool:
             for j in range(K):
                 if runners[j] is None:
                     assign[assign == j] = -1
+            part_rows = []
+            for i in np.flatnonzero(assign == PARTIAL):
+                spec = requests[i]["partial"]
+                reps = [idx_of[rid] for rid in spec["replicas"]]
+                if any(runners[j] is None for j in reps):
+                    assign[i] = -1       # runnerless contributor: whole
+                    continue             # request falls back to the cloud
+                part_rows.append(int(i))
             groups = []
             for j in list(range(K)) + [-1]:
                 idx = np.flatnonzero(assign == j)
@@ -150,8 +211,18 @@ class OffloadServingPool:
             for idx, outs in done:
                 for i, o in zip(idx, outs):
                     responses[i] = o
+            for i in part_rows:
+                spec = requests[i]["partial"]
+                subs = [runners[idx_of[rid]]([spec["payloads"][rid]])[0]
+                        for rid in spec["replicas"]]
+                asm = spec.get("assemble")
+                responses[i] = asm(subs) if asm is not None else subs
+                shipped_bits += float(np.asarray(
+                    spec["ship_bits"], dtype=np.float64).sum())
         return ServedBatch(assignments=assign, objective=sr.objective,
-                           schedule_seconds=dt, responses=responses)
+                           schedule_seconds=dt, responses=responses,
+                           partial_queries=int((assign == PARTIAL).sum()),
+                           partial_bytes_shipped=int(shipped_bits // 8))
 
 
 def make_sparql_runner(store, engine) -> Callable:

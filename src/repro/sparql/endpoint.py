@@ -128,10 +128,19 @@ class SparqlEndpoint:
                 self._plans.popitem(last=False)
         return plan
 
-    def explain(self, text: str) -> str:
+    def explain(self, text: str, user: int = 0) -> str:
         """Operator tree + per-BGP-leaf cache-hit provenance and estimated
-        cardinalities against this endpoint's store/engine state."""
-        return explain_plan(self.parse(text), self.store, self.engine)
+        cardinalities against this endpoint's store/engine state.
+
+        With an :class:`~repro.edge.system.EdgeCloudSystem` attached, a
+        scheduler dry-run for ``user`` is appended: the chosen assignment
+        kind (edge / cloud / partial) and, for a partial plan, the
+        per-server leaf split."""
+        plan = self.parse(text)
+        out = explain_plan(plan, self.store, self.engine)
+        if self.system is not None:
+            out += "\n" + self.system.explain_assignment(plan, user=user)
+        return out
 
     # -- execution -----------------------------------------------------------
     def _run(self, texts: list[str]) -> list[SolutionTable]:

@@ -1,0 +1,284 @@
+"""Collaborative partial evaluation (PR 8): the three-way scheduler's
+partial (edge-set -> cloud assembler) path must be bit-identical to the
+cloud-only oracle on both backends x both store kinds — star / path /
+flower queries straddling 2-3 edges — including under delta-rebalance
+mid-run (stale partial plans must fall back, never assemble), plus the
+serving-pool analogue and the endpoint explain surface."""
+
+import numpy as np
+import pytest
+
+from repro.core.cost import SystemParams
+from repro.core.pattern import pattern_of
+from repro.edge.system import PARTIAL, EdgeCloudSystem
+from repro.rdf.generator import generate_watdiv_like
+from repro.rdf.sharding import ShardedTripleStore
+from repro.sparql.algebra import compile_query, evaluate_many
+from repro.sparql.partial_eval import execute_partial_batch, plan_partial
+from repro.sparql.query import parse_query, parse_sparql
+
+from test_engine import BACKENDS, sol_rows
+
+# per-edge resident leaves: no single edge holds every leaf of any test
+# query, so the binary scheduler's only executable option is cloud
+LEAVES = {
+    0: ["SELECT ?x ?p WHERE { ?x <likes> ?p }"],
+    1: ["SELECT ?p ?gn WHERE { ?p <hasGenre> ?gn }",
+        "SELECT ?x ?y WHERE { ?x <follows> ?y }"],
+    2: ["SELECT ?x ?c WHERE { ?x <country> ?c }"],
+}
+# nested groups compile to separate BGP leaves; each query straddles the
+# residency of 2-3 edges
+QUERIES = {
+    "path2": "SELECT ?x ?gn WHERE { { ?x <likes> ?p } "
+             "{ ?p <hasGenre> ?gn } }",
+    "star3": "SELECT ?x ?y ?c WHERE { { ?x <likes> ?p } "
+             "{ ?x <follows> ?y } { ?x <country> ?c } }",
+    "flower": "SELECT ?x ?gn ?c WHERE { { ?x <likes> ?p } "
+              "{ ?p <hasGenre> ?gn } { ?x <country> ?c } }",
+}
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generate_watdiv_like(scale=1.0, seed=42)
+
+
+def partial_params(K=3, N=4):
+    """Bandwidth-constrained regime: slow user->cloud uplink, congested
+    cloud compute, fast edges and datacenter backhaul — partial wins."""
+    return SystemParams(
+        F=np.full(K, 1.0e9),
+        r_edge=np.full((N, K), 75e6),
+        r_cloud=np.full(N, 5e6),
+        assoc=np.ones((N, K), dtype=bool),
+        r_backhaul=np.full(K, 1e9),
+        F_cloud=0.05e9,
+    )
+
+
+def make_system(g, store, backend="numpy", enable_partial=True,
+                params=None):
+    sys_ = EdgeCloudSystem(store, g.dictionary,
+                           params or partial_params(),
+                           storage_budgets=10_000_000, backend=backend,
+                           enable_partial=enable_partial)
+    for k, texts in LEAVES.items():
+        sys_.edges[k].deploy(store, [pattern_of(parse_sparql(
+            t, g.dictionary)) for t in texts])
+    return sys_
+
+
+def compile_(g, text):
+    return compile_query(parse_query(text, g.dictionary), g.dictionary)
+
+
+def edge_map(sys_):
+    return {es.server_id: es for es in sys_.edges}
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("kind", ["mono", "sharded"])
+def test_partial_matches_cloud_oracle(graph, backend, kind):
+    """Oracle-equivalence matrix: every shape routes through the partial
+    path and returns exactly the cloud-only result, with honest
+    accounting (shipped bytes, contributing servers, per-server wall)."""
+    g = graph
+    store = (g.store if kind == "mono"
+             else ShardedTripleStore.from_store(g.store, 4))
+    sys_ = make_system(g, store, backend=backend)
+    for shape, text in QUERIES.items():
+        plan = compile_(g, text)
+        rep = sys_.run_round_batched([(0, plan)], policy="bnb",
+                                     collect_results=True)
+        o = rep.outcomes[0]
+        assert o.assigned_to == PARTIAL, shape
+        assert rep.partial_queries == 1 and rep.partial_fallbacks == 0
+        assert rep.partial_bytes_shipped > 0
+        assert rep.partial_bytes_shipped == int(o.shipped_bits // 8)
+        assert len(o.partial_servers) >= 2, shape   # straddles 2-3 edges
+        assert o.modeled_latency > 0 and o.realized_latency > 0
+        # contributing edges and the assembler both did accounted work
+        for sid in o.partial_servers:
+            assert rep.server_wall_seconds.get(sid, 0.0) >= 0.0
+        assert -1 in rep.server_wall_seconds
+        oracle = evaluate_many([plan], store, sys_.engine)[0]
+        assert sol_rows(rep.results[0]) == sol_rows(oracle), shape
+
+
+def test_partial_disabled_keeps_binary_assignment(graph):
+    g = graph
+    sys_ = make_system(g, g.store, enable_partial=False)
+    plan = compile_(g, QUERIES["path2"])
+    rep = sys_.run_round_batched([(0, plan)], policy="bnb",
+                                 collect_results=True)
+    assert rep.outcomes[0].assigned_to == -1
+    assert rep.partial_queries == 0 and rep.partial_bytes_shipped == 0
+    oracle = evaluate_many([plan], g.store, sys_.engine)[0]
+    assert sol_rows(rep.results[0]) == sol_rows(oracle)
+
+
+def test_partial_dearer_falls_back_to_cloud(graph):
+    """With the paper's legacy free cloud (F_cloud = inf) shipping binding
+    tables buys nothing — the scheduler must transparently keep cloud."""
+    g = graph
+    K, N = 3, 4
+    legacy = SystemParams(
+        F=np.full(K, 1.0e9),
+        r_edge=np.full((N, K), 75e6),
+        r_cloud=np.full(N, 5e6),
+        assoc=np.ones((N, K), dtype=bool),
+    )
+    sys_ = make_system(g, g.store, params=legacy)
+    plan = compile_(g, QUERIES["flower"])
+    rep = sys_.run_round_batched([(0, plan)], policy="bnb",
+                                 collect_results=True)
+    assert rep.outcomes[0].assigned_to == -1
+    assert rep.partial_queries == 0
+    assert "dearer" in sys_.explain_assignment(plan, user=0)
+    oracle = evaluate_many([plan], g.store, sys_.engine)[0]
+    assert sol_rows(rep.results[0]) == sol_rows(oracle)
+
+
+def test_explain_surfaces_assignment(graph):
+    from repro.sparql.endpoint import SparqlEndpoint
+    g = graph
+    sys_ = make_system(g, g.store)
+    ep = SparqlEndpoint.from_system(sys_)
+    out = ep.explain(QUERIES["path2"])
+    assert "assignment: partial" in out
+    assert "cloud assembler" in out
+    # the per-server leaf split is rendered below the assignment line
+    assert "ES0" in out or "edge 0" in out or "[0, 1]" in out
+
+
+def test_direct_plan_and_fresh_execute(graph):
+    g = graph
+    sys_ = make_system(g, g.store)
+    plan = compile_(g, QUERIES["path2"])
+    pp = plan_partial(plan, sys_.edges)
+    assert pp is not None and len(pp.edge_set) == 2
+    pex = execute_partial_batch([pp], g.store, sys_.engine,
+                                edge_map(sys_))[0]
+    assert not pex.fallback
+    oracle = evaluate_many([plan], g.store, sys_.engine)[0]
+    assert sol_rows(pex.result) == sol_rows(oracle)
+    assert sum(pex.per_server_bits.values()) > 0
+
+
+def test_stale_plan_falls_back_never_assembles(graph):
+    """A partial plan whose edge-store versions moved between planning and
+    execution must fall back to one whole-query cloud evaluation."""
+    g = graph
+    sys_ = make_system(g, g.store)
+    plan = compile_(g, QUERIES["path2"])
+    pp = plan_partial(plan, sys_.edges)
+    # version bump on a contributing edge: re-deploy its leaf
+    sys_.edges[0].deploy(g.store, [pattern_of(parse_sparql(
+        LEAVES[0][0], g.dictionary))])
+    pex = execute_partial_batch([pp], g.store, sys_.engine,
+                                edge_map(sys_))[0]
+    assert pex.fallback
+    oracle = evaluate_many([plan], g.store, sys_.engine)[0]
+    assert sol_rows(pex.result) == sol_rows(oracle)
+
+
+def test_delta_rebalance_hammer(graph):
+    """Delta-rebalance mid-run: plans captured before a rebalance must
+    fall back exactly when a contributing edge's store version moved;
+    results match the oracle in every round, before and after."""
+    g = graph
+    sys_ = make_system(g, g.store)
+    plan = compile_(g, QUERIES["flower"])
+    oracle_rows = sol_rows(evaluate_many([plan], g.store,
+                                         sys_.engine)[0])
+    saw_fallback = saw_fresh = False
+    for _ in range(4):
+        rep = sys_.run_round_batched([(0, plan)], policy="bnb",
+                                     collect_results=True)
+        assert sol_rows(rep.results[0]) == oracle_rows
+        # capture a partial plan, then rebalance under it
+        pp = plan_partial(plan, sys_.edges)
+        sys_.rebalance_all(use_deltas=True)
+        if pp is None:
+            continue   # rebalance gave some edge full residency earlier
+        moved = any(
+            sys_.edges[sid].store is None
+            or sys_.edges[sid].store.version != v
+            for sid, v in pp.store_versions.items())
+        pex = execute_partial_batch([pp], g.store, sys_.engine,
+                                    edge_map(sys_))[0]
+        assert pex.fallback == moved
+        assert sol_rows(pex.result) == oracle_rows
+        saw_fallback |= pex.fallback
+        saw_fresh |= not pex.fallback
+    # the hammer must exercise the guard at least once (the first
+    # rebalance re-places the observed leaves and bumps versions)
+    assert saw_fallback
+    # post-hammer round still answers correctly whatever the assignment
+    rep = sys_.run_round_batched([(0, plan)], policy="bnb",
+                                 collect_results=True)
+    assert sol_rows(rep.results[0]) == oracle_rows
+
+
+def test_round_fallback_counted_in_report(graph):
+    """A round whose partial plan goes stale mid-flight reassigns to
+    cloud, counts the fallback, and ships nothing for that query."""
+    g = graph
+    sys_ = make_system(g, g.store)
+    plan = compile_(g, QUERIES["path2"])
+    # sabotage: make planning see current versions, then bump one edge
+    # between scheduling and execution by hooking the engine's first use
+    tasks = sys_.build_tasks([(0, plan)], include_partial=True)
+    opt = tasks.partial_option(0)
+    assert opt is not None
+    sys_.edges[0].deploy(g.store, [pattern_of(parse_sparql(
+        LEAVES[0][0], g.dictionary))])
+    pex = execute_partial_batch([opt.plan], g.store, sys_.engine,
+                                edge_map(sys_))[0]
+    assert pex.fallback
+    oracle = evaluate_many([plan], g.store, sys_.engine)[0]
+    assert sol_rows(pex.result) == sol_rows(oracle)
+
+
+def test_serving_pool_partial_option():
+    """The serving analogue: a request no replica fully serves may carry a
+    partial spec; chosen rows run sub-payloads at the contributing
+    replicas and assemble, runnerless contributors fall back whole."""
+    from repro.runtime.serving import (PARTIAL as POOL_PARTIAL,
+                                       OffloadServingPool, Replica)
+
+    def mk(name):
+        return lambda payloads: [f"{name}:{p}" for p in payloads]
+
+    spec = {"replicas": [0, 1], "cycles": [5e5, 2e5],
+            "ship_bits": [2e5, 1e5], "assemble_cycles": 5e5,
+            "payloads": {0: "subA", 1: "subB"},
+            "assemble": lambda subs: "+".join(subs)}
+    reqs = [
+        {"class_id": 0, "cycles": 7e5, "result_bits": 3e5, "payload": "q0"},
+        {"class_id": 9, "cycles": 2e6, "result_bits": 3e5, "payload": "q1",
+         "partial": dict(spec)},
+        {"class_id": 9, "cycles": 1e5, "result_bits": 3e5, "payload": "q2"},
+    ]
+    reps = [Replica(0, {0}, 1e9, 75e6, runner=mk("r0")),
+            Replica(1, {1}, 1e9, 75e6, runner=mk("r1"))]
+    pool = OffloadServingPool(reps, mk("cloud"), cloud_link_bps=5e6,
+                              cloud_cycles_per_s=5e7, backhaul_bps=1e9)
+    sb = pool.admit(reqs, policy="bnb")
+    assert sb.assignments[1] == POOL_PARTIAL
+    assert sb.responses[1] == "r0:subA+r1:subB"
+    assert sb.responses[0].startswith("r0:")
+    assert sb.responses[2].startswith("cloud:")
+    assert sb.partial_queries == 1
+    assert sb.partial_bytes_shipped == int(3e5 // 8)
+
+    # runnerless contributing replica: the whole request falls back
+    reps2 = [Replica(0, {0}, 1e9, 75e6, runner=mk("r0")),
+             Replica(1, {1}, 1e9, 75e6, runner=None)]
+    pool2 = OffloadServingPool(reps2, mk("cloud"), cloud_link_bps=5e6,
+                               cloud_cycles_per_s=5e7, backhaul_bps=1e9)
+    sb2 = pool2.admit([reqs[1]], policy="bnb")
+    assert sb2.assignments[0] == -1
+    assert sb2.responses[0] == "cloud:q1"
+    assert sb2.partial_queries == 0
