@@ -144,6 +144,27 @@ def main() -> None:
           f"{prep.partial_bytes_shipped:,}B of binding tables, "
           f"{prep.results[0].num_matches} rows assembled at the cloud")
 
+    # 6c. live ingest (PR 9): SPARQL UPDATE through the same endpoint.
+    #     INSERT DATA mints new dictionary terms (bumping the version the
+    #     plan memo keys on), routes rows to the right shards id-stably,
+    #     invalidates only the touched patterns' induced-subgraph memos,
+    #     and propagates version-consistent deltas to every populated
+    #     edge replica — queries never observe a half-applied placement.
+    ack = ep.update('INSERT DATA { <liveUser> <likes> <Product0> . '
+                    '<liveUser> <country> <Country1> }')
+    print(f"\ningest: +{ack['inserted']} triples, "
+          f"{ack['new_terms']} new terms, {ack['edges_updated']} edge "
+          f"replicas updated ({ack['shipped_bytes']}B shipped), "
+          f"placement epoch {ack['placement_epoch']}")
+    print("liveUser rows:", ep.query(
+        'SELECT ?p ?o WHERE { <liveUser> ?p ?o }').num_matches)
+    ep.update('DELETE WHERE { <liveUser> ?p ?o }')   # and back out
+    # continuous-ingest regimes pair writes with the multi-epoch
+    # pipelined rebalance: epoch N+1's induced-id prefetch overlaps
+    # epoch N's commit, and writes are admitted between epochs
+    pipe = system.rebalance_pipeline(epochs=2)
+    print(f"pipelined rebalance: epochs {[r.epoch for r in pipe]}")
+
     # 7. serving: the SPARQL-Protocol HTTP front end. Concurrent clients
     #    coalesce inside a 2ms admission window into ONE engine batch
     #    (W3C JSON results; 503+Retry-After on a full queue, 504 on
@@ -161,10 +182,21 @@ def main() -> None:
             t.start()
         for t in threads:
             t.join()
+        # writes ride the same route: POST application/sparql-update
+        # serializes against the micro-batch window it shares (reads in
+        # the window see the pre-write store, the write commits after)
+        upd = urllib.request.Request(
+            srv.url + "/sparql",
+            data=b"INSERT DATA { <httpUser> <likes> <Product0> }",
+            headers={"Content-Type": "application/sparql-update"},
+            method="POST")
+        with urllib.request.urlopen(upd) as r:
+            wack = json.loads(r.read())
         adm = srv.stats_dict()["admission"]
     print(f"\nHTTP: {len(replies)} concurrent clients -> {adm['batches']} "
           f"engine batches (mean batch {adm['mean_batch_size']:.1f}); "
-          f"ASK over HTTP: {replies[2]['boolean']}")
+          f"ASK over HTTP: {replies[2]['boolean']}; update over HTTP: "
+          f"+{wack['inserted']} triple, {wack['new_terms']} new term(s)")
 
 
 if __name__ == "__main__":

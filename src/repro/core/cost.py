@@ -259,6 +259,33 @@ CYCLES_PER_ROW = 220.0       # calibration constant: join work per binding row
 CYCLES_BASE = 5e4            # fixed per-query overhead (parse, plan)
 BITS_PER_CELL = 64.0
 BITS_PER_BYTE = 8
+# realized-latency calibration: measured engine wall (prescan + join phases)
+# -> cost-model cycles. The reference machine the row-count calibration
+# above was fit on runs ~1e9 model-cycles of matcher work per wall second,
+# so a measured second of engine time prices the same as ~4.5M result rows.
+CYCLES_PER_ENGINE_SECOND = 1.0e9
+
+
+def measured_cycles(n_rows: int, engine_seconds: float = 0.0) -> float:
+    """Realized c_n: cost-model cycles from MEASURED execution evidence.
+
+    When per-phase engine wall is available (``ExecutionRecord.
+    engine_seconds`` / ``PartialExecution.per_server_seconds`` — the
+    prescan+join seconds the engine actually spent on this work), cycles
+    derive from it directly, floored only at the fixed per-query overhead.
+    Final row counts alone misprice compute in both directions: they
+    undercount intermediate join work (a selective query over a huge graph
+    can burn seconds and return 3 rows) and overcharge work that never
+    re-ran (a partial plan's cloud ASSEMBLY joins two shipped binding
+    tables, yet the final row count prices it like a from-scratch
+    evaluation) — the ROADMAP partial-eval follow-on (c) fidelity gap. The
+    row-count calibration remains the fallback for records with no phase
+    measurement (``engine_seconds == 0``).
+    """
+    if engine_seconds > 0.0:
+        return float(max(CYCLES_BASE,
+                         engine_seconds * CYCLES_PER_ENGINE_SECOND))
+    return float(CYCLES_BASE + CYCLES_PER_ROW * max(n_rows, 1))
 
 
 def result_bits(res, projection: list[str]) -> float:

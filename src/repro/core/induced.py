@@ -130,6 +130,25 @@ class InducedIndex:
             return np.zeros(0, dtype=np.int64)
         return np.unique(np.concatenate(parts))
 
+    def install(self, version, entries: dict[tuple, np.ndarray]) -> None:
+        """Seed the working set for ``version`` with precomputed entries,
+        superseding every other version.
+
+        This is the live-ingest carry-forward: when a delta touches only
+        some predicates, :meth:`repro.edge.system.EdgeCloudSystem.
+        apply_update` proves which patterns are untouched, remaps their old
+        matched-edge ids to the new global id space, and installs them here
+        — so the post-ingest rebalance/propagation pays matcher calls only
+        for genuinely invalidated patterns. Entries land as memo *hits*.
+        """
+        with self._lock:
+            self._memo = {version: dict(entries)}
+
+    def entries_for(self, version) -> dict[tuple, np.ndarray]:
+        """Snapshot of the memo entries for ``version`` (empty if gone)."""
+        with self._lock:
+            return dict(self._memo.get(version, {}))
+
     def clear(self) -> None:
         with self._lock:
             self._memo.clear()

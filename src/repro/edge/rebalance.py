@@ -176,39 +176,103 @@ class RebalanceManager:
             report.epoch = sys_.placement_epoch
         return report
 
+    def _warm_induced(self) -> None:
+        """Next-epoch prefetch: pull every observed pattern's induced edge
+        ids into the shared memo against the CURRENT cloud version. Touches
+        only the (lock-guarded) InducedIndex and the cloud store — never
+        the edge stores a concurrent commit mutates — so it runs while the
+        previous epoch commits; the next compute phase then hits the memo
+        instead of the matcher. Best-effort: a cloud write mid-prefetch
+        just supersedes the warmed version."""
+        cloud = self.system.cloud.store
+        try:
+            for es in self.system.edges:
+                for p in list(es.placement.patterns.values()):
+                    self.system.induced.edge_ids(cloud, p)
+        except Exception:
+            pass        # prefetch only; the compute phase recomputes
+
+    def _compute_commit(self, use: bool, max_attempts: int = 3,
+                        overlap_next: bool = False) -> RebalanceReport:
+        """One epoch: lock-free compute -> (optional next-epoch prefetch
+        thread) -> epoch-barrier commit. Caller holds ``_busy``.
+
+        The cloud may advance through live ingest while the lock-free
+        compute phase runs; plans are id-space-bound to the version they
+        were computed against, so a moved cloud triggers a recompute. If
+        sustained write traffic outruns ``max_attempts`` lock-free tries,
+        the final attempt computes AND commits atomically inside the
+        placement lock (reentrant, so ``_commit`` re-enters it): writes
+        queue for the duration of one compute instead of placement
+        maintenance wedging forever.
+        """
+        ind = self.system.induced
+        h0, m0 = ind.hits, ind.misses
+        compute_dt = commit_dt = 0.0
+        report = None
+        warm = None
+        for _ in range(max_attempts):
+            version = self.system.cloud.store.version
+            t0 = time.perf_counter()
+            plans = self._compute(use)
+            compute_dt += time.perf_counter() - t0
+            if self.pre_commit_hook is not None:
+                self.pre_commit_hook()
+            if overlap_next and warm is None:
+                # pipeline: epoch N+1's expensive matching overlaps epoch
+                # N's commit (the commit never mutates the cloud store the
+                # prefetch reads)
+                warm = threading.Thread(target=self._warm_induced,
+                                        name="rebalance-warm", daemon=True)
+                warm.start()
+            t1 = time.perf_counter()
+            report = self._commit(plans, version)
+            commit_dt = time.perf_counter() - t1
+            if report is not None:
+                break
+        if report is None:
+            with self.system._placement_lock:
+                version = self.system.cloud.store.version
+                t0 = time.perf_counter()
+                plans = self._compute(use)
+                compute_dt += time.perf_counter() - t0
+                t1 = time.perf_counter()
+                report = self._commit(plans, version)
+                commit_dt = time.perf_counter() - t1
+            assert report is not None   # version cannot move under the lock
+        report.compute_seconds = compute_dt
+        report.commit_seconds = commit_dt
+        report.matcher_calls = ind.misses - m0
+        report.induced_hits = ind.hits - h0
+        self.system.last_rebalance = report
+        return report
+
     # -- entry points --------------------------------------------------------
     def run(self, use_deltas: bool | None = None) -> RebalanceReport:
         """Compute + commit, synchronously (but still delta-shipping)."""
         use = self.use_deltas if use_deltas is None else bool(use_deltas)
         with self._busy:
-            ind = self.system.induced
-            h0, m0 = ind.hits, ind.misses
-            compute_dt = 0.0
-            report = None
-            # the cloud may advance (live ingest) while the lock-free
-            # compute phase runs; plans are id-space-bound to the version
-            # they were computed against, so recompute on a moved cloud
-            for _ in range(3):
-                version = self.system.cloud.store.version
-                t0 = time.perf_counter()
-                plans = self._compute(use)
-                compute_dt += time.perf_counter() - t0
-                if self.pre_commit_hook is not None:
-                    self.pre_commit_hook()
-                t1 = time.perf_counter()
-                report = self._commit(plans, version)
-                if report is not None:
-                    report.commit_seconds = time.perf_counter() - t1
-                    break
-            if report is None:
-                raise RuntimeError(
-                    "cloud store version kept moving during rebalance "
-                    "(3 attempts); quiesce ingest and retry")
-            report.compute_seconds = compute_dt
-            report.matcher_calls = ind.misses - m0
-            report.induced_hits = ind.hits - h0
-            self.system.last_rebalance = report
-            return report
+            return self._compute_commit(use)
+
+    def run_pipeline(self, epochs: int = 2,
+                     use_deltas: bool | None = None) -> list[RebalanceReport]:
+        """Multi-epoch pipelined rebalance for continuous-ingest regimes.
+
+        Runs ``epochs`` back-to-back placement epochs; within each, the
+        next epoch's induced-id prefetch overlaps the current commit
+        (``_compute_commit(overlap_next=True)``), and BETWEEN epochs no
+        lock is held — write traffic (``EdgeCloudSystem.apply_update``)
+        and query rounds are admitted freely. Sustained writes can never
+        starve an epoch: the per-epoch locked fallback bounds how long the
+        cloud can keep moving under a compute phase. Returns the per-epoch
+        reports (``system.last_rebalance`` keeps the final one).
+        """
+        use = self.use_deltas if use_deltas is None else bool(use_deltas)
+        reports: list[RebalanceReport] = []
+        with self._busy:
+            for _ in range(max(1, int(epochs))):
+                reports.append(self._compute_commit(use, overlap_next=True))
+        return reports
 
     def start(self, use_deltas: bool | None = None) -> RebalanceHandle:
         """Run the rebalance on a background daemon thread, overlapping

@@ -48,14 +48,21 @@ class ExecutionRecord:
     n_matches: int
     wall_seconds: float
     result_bits: float
+    # per-phase engine wall (prescan + join seconds) attributable to this
+    # query — the realized-latency cost model derives measured cloud cycles
+    # from it instead of final row counts alone (see
+    # :func:`repro.core.cost.measured_cycles`); 0.0 when unavailable
+    engine_seconds: float = 0.0
 
     @classmethod
     def of(cls, res: MatchResult, projection: list[str],
-           wall_seconds: float) -> "ExecutionRecord":
+           wall_seconds: float,
+           engine_seconds: float = 0.0) -> "ExecutionRecord":
         """Build from a match result; ``result_bits`` goes through the
         single-sourced :func:`repro.core.cost.result_bits` conversion."""
         return cls(n_matches=res.num_matches, wall_seconds=wall_seconds,
-                   result_bits=result_bits(res, projection))
+                   result_bits=result_bits(res, projection),
+                   engine_seconds=engine_seconds)
 
 
 def _execute_batch(store: RDFStore, engine: QueryEngine,
@@ -70,10 +77,22 @@ def _execute_batch(store: RDFStore, engine: QueryEngine,
     batch, and an algebra result is a
     :class:`~repro.sparql.algebra.SolutionTable` (same cost-accounting
     surface as :class:`MatchResult`)."""
+    s = engine.stats
+    e0 = s.prescan_seconds + s.join_seconds
     t0 = time.perf_counter()
     results = execute_any_batch(store, engine, queries)
-    per_q = (time.perf_counter() - t0) / max(1, len(queries))
-    return [(res, ExecutionRecord.of(res, list(q.projection), per_q))
+    wall = time.perf_counter() - t0
+    # per-phase engine seconds this batch spent scanning + joining. The
+    # stats object is shared across overlapped server batches, so the delta
+    # is clamped to this batch's own wall before apportioning — a
+    # concurrent thread's phase time can inflate the counter but never
+    # charge more than the time that actually elapsed here.
+    # the 1ns floor marks "measured (served from cache, essentially
+    # free)" as distinct from "not measured" for measured_cycles
+    eng = max(min(s.prescan_seconds + s.join_seconds - e0, wall), 1e-9)
+    per_q = wall / max(1, len(queries))
+    per_e = eng / max(1, len(queries))
+    return [(res, ExecutionRecord.of(res, list(q.projection), per_q, per_e))
             for q, res in zip(queries, results)]
 
 

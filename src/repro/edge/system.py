@@ -58,7 +58,7 @@ from ..core.cost import (CYCLES_BASE, CYCLES_PER_ROW, BITS_PER_CELL,
                          PartialOption, QueryTasks, SystemParams,
                          estimate_query_cost, partial_free_cost)
 from ..core.induced import InducedIndex
-from ..core.pattern import (Pattern, feasibility_patterns,
+from ..core.pattern import (VAR_PRED_LABEL, Pattern, feasibility_patterns,
                             observed_patterns)
 from ..core.placement import PatternProfile, greedy_knapsack
 from ..core.scheduler import ScheduleResult, schedule
@@ -224,6 +224,36 @@ class RoundReport:
     def assignment_ratio(self) -> dict[int, float]:
         n = max(1, len(self.outcomes))
         return {k: v / n for k, v in sorted(self.assignment_counts.items())}
+
+
+@dataclass
+class IngestReport:
+    """Outcome of one live-ingest write (cloud ``apply_delta`` path)."""
+
+    kind: str = ""                 # insert_data | delete_data | delete_where
+    n_add: int = 0                 # triples added to the cloud
+    n_evict: int = 0               # triples removed from the cloud
+    new_terms: int = 0             # dictionary terms minted (version bumps)
+    dropped_rows: int = 0          # no-op delete rows (unknown terms)
+    touched_predicates: list[int] | None = None   # None == all predicates
+    patterns_carried: int = 0      # induced-memo entries carried forward
+    patterns_invalidated: int = 0  # entries dropped (must re-match)
+    edges_updated: int = 0         # edge stores that received a delta
+    shipped_bytes: int = 0         # cloud->edge delta wire bytes
+    cloud_version_before: object = None
+    cloud_version: object = None
+    placement_epoch: int = 0
+    apply_seconds: float = 0.0
+
+    @property
+    def is_noop(self) -> bool:
+        return not (self.n_add or self.n_evict)
+
+
+def _pattern_key_labels(key: tuple) -> set[int]:
+    """Edge labels of a canonical pattern key (``(n_vertices, code)`` —
+    every DFS-code entry carries its label last)."""
+    return {entry[-1] for entry in key[1]}
 
 
 class EdgeCloudSystem:
@@ -509,11 +539,14 @@ class EdgeCloudSystem:
     @staticmethod
     def _realized_latency(rec, i: int, k: int, sr: ScheduleResult,
                           params_batch: SystemParams) -> float:
-        # realized response time: same cost model, measured w (and
-        # measured-row-derived cycles) — the paper reports measured
-        # response times; estimates only drive the scheduler
-        from ..core.cost import CYCLES_BASE, CYCLES_PER_ROW
-        c_real = CYCLES_BASE + CYCLES_PER_ROW * max(rec.n_matches, 1)
+        # realized response time: same cost model, measured w and measured
+        # cycles — per-phase engine wall (prescan+join) when available,
+        # floored at the row-derived figure (repro.core.cost.
+        # measured_cycles); the paper reports measured response times,
+        # estimates only drive the scheduler
+        from ..core.cost import measured_cycles
+        c_real = measured_cycles(rec.n_matches,
+                                 getattr(rec, "engine_seconds", 0.0))
         if k >= 0:
             f = max(sr.f[i, k], 1e-30)
             return c_real / f + rec.result_bits / params_batch.r_edge[i, k]
@@ -524,21 +557,28 @@ class EdgeCloudSystem:
 
     def _realized_partial_latency(self, pe, rec, i: int,
                                   params_batch: SystemParams) -> float:
-        # generalized Eq. 5 with MEASURED per-edge rows and egress bits:
-        # fragment compute per contributing edge, binding-table shipping
-        # over each edge's backhaul, row-proportional assembly at the
-        # cloud, final delivery over the user's cloud link
-        from ..core.cost import CYCLES_BASE, CYCLES_PER_ROW
+        # generalized Eq. 5 with MEASURED per-edge rows/wall and egress
+        # bits: fragment compute per contributing edge, binding-table
+        # shipping over each edge's backhaul, assembly at the cloud
+        # (per-server engine wall feeds measured_cycles the same way the
+        # single-server path does), final delivery over the user's cloud
+        # link
+        from ..core.cost import measured_cycles
         bh = params_batch.backhaul
+        # engine-phase seconds (prescan+join) when the executor recorded
+        # them; raw walls otherwise — symmetric with the single-server
+        # path's ExecutionRecord.engine_seconds
+        secs = (getattr(pe, "per_server_engine_seconds", None)
+                or pe.per_server_seconds)
         t = 0.0
         for sid, rows in pe.per_server_rows.items():
             if sid >= 0:
-                t += (CYCLES_BASE + CYCLES_PER_ROW * max(rows, 1)
-                      ) / self.params.F[sid]
+                t += measured_cycles(rows, secs.get(sid, 0.0)
+                                     ) / self.params.F[sid]
         for sid, bits in pe.per_server_bits.items():
             t += bits / bh[sid]
-        t += (CYCLES_BASE + CYCLES_PER_ROW * max(rec.n_matches, 1)
-              ) / params_batch.F_cloud
+        t += measured_cycles(rec.n_matches, secs.get(-1, 0.0)
+                             ) / params_batch.F_cloud
         return float(t + rec.result_bits / params_batch.r_cloud[i])
 
     def explain_assignment(self, q, user: int = 0) -> str:
@@ -826,6 +866,163 @@ class EdgeCloudSystem:
                            partial_fallbacks=sum(
                                1 for pe in partial_exec.values()
                                if pe.fallback))
+
+    # -- live ingest (the write path) ----------------------------------------
+    def apply_update(self, update) -> IngestReport:
+        """THE ingest path: execute one SPARQL UPDATE against the live
+        system.
+
+        ``update`` is an update text, a parsed
+        :class:`~repro.sparql.query.ParsedUpdate`, or a compiled
+        :class:`~repro.sparql.update.CompiledUpdate`. Under the placement
+        lock (so no query round ever observes a half-applied write):
+
+        1. compile through the shared dictionary (new INSERT DATA terms
+           bump ``Dictionary.version`` — plan memos keyed on it invalidate);
+        2. turn it into a version-guarded cloud :class:`TripleDelta`
+           (``DELETE WHERE`` evaluates its template here, against the
+           locked store) and apply it — :meth:`ShardedTripleStore.
+           apply_delta` routes rows to owning shards id-stably, mutating
+           only touched shards;
+        3. carry the :class:`InducedIndex` memo forward for patterns whose
+           edge labels are disjoint from the delta's predicates (their
+           matched-triple *content* provably cannot change — every matched
+           triple carries one of the pattern's bound labels), remapping
+           their edge ids into the new global id space; patterns touching
+           a written predicate (or with a variable-predicate edge) are
+           invalidated and re-match lazily;
+        4. propagate version-consistently to every edge holding data: each
+           edge's residency is re-derived against the new cloud (memo hits
+           for carried patterns) and shipped as a content delta through the
+           existing pipeline, then its index republishes at the new cloud
+           version — feasibility certificates never go stale.
+        """
+        from ..sparql.query import ParsedUpdate, parse_update
+        from ..sparql.update import (CompiledUpdate, compile_update,
+                                     ground_delta, where_evict_rows)
+        if isinstance(update, str):
+            update = parse_update(update, self.dictionary)
+        if isinstance(update, ParsedUpdate):
+            update = compile_update(update, self.dictionary)
+        if not isinstance(update, CompiledUpdate):
+            raise TypeError(f"not an update: {type(update).__name__}")
+        from ..rdf.deltas import TripleDelta
+        with self._placement_lock:
+            cloud = self.cloud.store
+            if update.where is not None:
+                delta = TripleDelta(base_version=cloud.version,
+                                    evict=where_evict_rows(update, cloud))
+            else:
+                delta = ground_delta(update, cloud)
+            rep = self._apply_cloud_delta(delta,
+                                          update.touched_predicates())
+            rep.kind = update.kind
+            rep.new_terms = update.new_terms
+            rep.dropped_rows = update.dropped_rows
+            return rep
+
+    def apply_delta(self, add=None, evict=None) -> IngestReport:
+        """Raw-rows ingest: apply ``[N, 3]`` add/evict triple rows to the
+        cloud through the same locked path as :meth:`apply_update` (bulk
+        loaders and tests write here; SPARQL UPDATE compiles onto it)."""
+        from ..rdf.deltas import as_rows
+        from ..sparql.update import CompiledUpdate, ground_delta
+        cu = CompiledUpdate(
+            kind="raw",
+            add=as_rows(add if add is not None
+                        else np.zeros((0, 3), dtype=np.int64)),
+            evict=as_rows(evict if evict is not None
+                          else np.zeros((0, 3), dtype=np.int64)))
+        with self._placement_lock:
+            delta = ground_delta(cu, self.cloud.store)
+            rep = self._apply_cloud_delta(delta, cu.touched_predicates())
+            rep.kind = "raw"
+            return rep
+
+    def _apply_cloud_delta(self, delta,
+                           touched: set[int] | None) -> IngestReport:
+        """Commit one cloud delta + memo carry-forward + edge propagation.
+        Caller holds the placement lock."""
+        from ..rdf.deltas import delta_between, rows_at
+        t0 = time.perf_counter()
+        cloud = self.cloud.store
+        v_before = cloud.version
+        rep = IngestReport(n_add=delta.n_add, n_evict=delta.n_evict,
+                           touched_predicates=(None if touched is None
+                                               else sorted(touched)),
+                           cloud_version_before=v_before,
+                           cloud_version=v_before,
+                           placement_epoch=self.placement_epoch)
+        if delta.is_noop:
+            rep.apply_seconds = time.perf_counter() - t0
+            return rep
+
+        old_rows = cloud.triples()               # pre-write content snapshot
+        old_entries = self.induced.entries_for(v_before)
+        cloud.apply_delta(delta)                 # id-stable shard routing
+        rep.cloud_version = cloud.version
+
+        # induced-memo carry-forward: a pattern is untouched iff every edge
+        # label is bound AND outside the written predicate set — then its
+        # matched-triple content is unchanged and only the global ids moved
+        # (stores re-sort on mutation). One bytewise argsort of the new
+        # content remaps all survivors.
+        survivors: dict[tuple, np.ndarray] = {}
+        if old_entries:
+            sorted_flat = order = None
+            void = np.dtype((np.void, old_rows.dtype.itemsize * 3))
+            for key, eids in old_entries.items():
+                labels = _pattern_key_labels(key)
+                if (touched is None or VAR_PRED_LABEL in labels
+                        or labels & touched):
+                    rep.patterns_invalidated += 1
+                    continue
+                if not len(eids):
+                    survivors[key] = eids
+                    continue
+                if sorted_flat is None:
+                    new_flat = np.ascontiguousarray(
+                        cloud.triples()).view(void).ravel()
+                    order = np.argsort(new_flat)
+                    sorted_flat = new_flat[order]
+                keys = np.ascontiguousarray(
+                    old_rows[eids]).view(void).ravel()
+                pos = np.searchsorted(sorted_flat, keys)
+                # untouched-pattern invariant: every matched row survived
+                assert np.array_equal(sorted_flat[pos], keys), \
+                    "carry-forward remap lost rows of an untouched pattern"
+                survivors[key] = np.sort(order[pos])
+        rep.patterns_carried = len(survivors)
+        self.induced.install(cloud.version, survivors)
+
+        # version-consistent propagation: every edge with resident data
+        # re-derives its residency against the NEW cloud (memo hits for
+        # carried patterns, fresh matches for invalidated ones) and takes
+        # the content diff through the existing delta pipeline
+        for es in self.edges:
+            if es.store is None:
+                continue
+            resident = dict(es._resident)
+            target = self.induced.union_edge_ids(cloud,
+                                                 list(resident.values()))
+            edge_delta = delta_between(es.store, rows_at(cloud, target))
+            if not edge_delta.is_noop:
+                es.store.apply_delta(edge_delta)
+                rep.edges_updated += 1
+                rep.shipped_bytes += edge_delta.shipped_bytes
+            es._publish(resident, target, cloud.version)
+        self.placement_epoch += 1
+        rep.placement_epoch = self.placement_epoch
+        rep.apply_seconds = time.perf_counter() - t0
+        return rep
+
+    def rebalance_pipeline(self, epochs: int = 2,
+                           use_deltas: bool = True) -> list[RebalanceReport]:
+        """Run ``epochs`` pipelined rebalance passes (compute N+1 overlaps
+        commit N; writes admitted between epochs) — see
+        :meth:`repro.edge.rebalance.RebalanceManager.run_pipeline`."""
+        return self.rebalancer.run_pipeline(epochs=epochs,
+                                            use_deltas=use_deltas)
 
     def rebalance_all(self, use_deltas: bool = True,
                       ) -> dict[int, tuple[int, int]]:

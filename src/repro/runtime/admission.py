@@ -66,17 +66,21 @@ class AdmissionClosed(AdmissionError):
 
 
 class Ticket:
-    """One admitted query: a thread-safe future the submitter blocks on."""
+    """One admitted request (query or update): a thread-safe future the
+    submitter blocks on. Query tickets resolve to a solution table; update
+    tickets resolve to the endpoint's ack dict."""
 
     __slots__ = ("text", "user", "enqueued_at", "deadline",
-                 "_event", "_value", "_error", "batch_seq")
+                 "_event", "_value", "_error", "batch_seq", "is_update")
 
     def __init__(self, text: str, user: int,
-                 enqueued_at: float, deadline: float | None) -> None:
+                 enqueued_at: float, deadline: float | None,
+                 is_update: bool = False) -> None:
         self.text = text
         self.user = user
         self.enqueued_at = enqueued_at
         self.deadline = deadline            # monotonic seconds, or None
+        self.is_update = is_update
         self._event = threading.Event()
         self._value = None
         self._error: BaseException | None = None
@@ -220,13 +224,27 @@ class AdmissionQueue:
         :class:`~repro.sparql.query.ParseError` HERE, before the query
         occupies a queue slot (and the compiled plan is memoized, so the
         dispatcher's later parse is free).
+
+        SPARQL UPDATE texts (``INSERT DATA`` / ``DELETE DATA`` / ``DELETE
+        WHERE``) are admitted through the same queue: their ticket resolves
+        to the write ack, and the write serializes against the micro-batch
+        window it shares — every query in the window reads the pre-window
+        store, the write commits after (see :meth:`_execute_batch`).
         """
-        self.endpoint.parse(text)           # raises ParseError on bad text
+        from ..sparql.query import is_update_text, parse_update
+        is_upd = is_update_text(text)
+        if is_upd:
+            # eager syntax check only — compilation may mint dictionary
+            # terms, which must happen at COMMIT time under the system's
+            # placement lock, not at admission
+            parse_update(text, self.endpoint.dictionary)
+        else:
+            self.endpoint.parse(text)       # raises ParseError on bad text
         now = time.monotonic()
         timeout = timeout_s if timeout_s is not None else \
             self.default_timeout_s
         deadline = (now + timeout) if timeout is not None else None
-        ticket = Ticket(text, user, now, deadline)
+        ticket = Ticket(text, user, now, deadline, is_update=is_upd)
         with self._cond:
             if self._closed:
                 raise AdmissionClosed("admission queue is closed")
@@ -321,7 +339,19 @@ class AdmissionQueue:
         return live
 
     def _execute_batch(self, batch: list[Ticket]) -> None:
+        """Serve one micro-batch: queries first (ONE engine batch against
+        the pre-window store), then updates in arrival order.
+
+        This is the write-serialization contract: an update admitted into
+        a window commits only AFTER every query of that window has read —
+        so reads in the window observe one consistent store version, and
+        the write's version bump (store, and dictionary for new terms)
+        invalidates exactly the memos it should for the NEXT window. A
+        failing update rejects only its own ticket.
+        """
         ep = self.endpoint
+        reads = [t for t in batch if not t.is_update]
+        updates = [t for t in batch if t.is_update]
         texts = [t.text for t in batch]
         seq = self._seq
         self._seq += 1
@@ -329,27 +359,42 @@ class AdmissionQueue:
         hits0 = ep.stats.cache_hits
         dedup0 = ep.stats.scans_deduped
         t0 = time.monotonic()
-        try:
-            if self.mode == "round":
-                report = ep.run_round([(t.user, t.text) for t in batch],
-                                      collect_results=True,
-                                      **self.mode_kw)
-                tables = report.results
-            elif self.mode == "pool":
-                served = ep.admit_many(texts, **self.mode_kw)
-                tables = served.responses
+        if reads:
+            rtexts = [t.text for t in reads]
+            try:
+                if self.mode == "round":
+                    report = ep.run_round(
+                        [(t.user, t.text) for t in reads],
+                        collect_results=True, **self.mode_kw)
+                    tables = report.results
+                elif self.mode == "pool":
+                    served = ep.admit_many(rtexts, **self.mode_kw)
+                    tables = served.responses
+                else:
+                    tables = ep.query_many(rtexts)
+            except Exception as err:           # engine-level failure:
+                for t in reads:                # fail the window's reads
+                    t._reject(err)
+                self.stats.failed += len(reads)
+                reads = []
             else:
-                tables = ep.query_many(texts)
-        except Exception as err:               # engine-level failure:
-            for t in batch:                    # fail the whole batch
+                for ticket, table in zip(reads, tables):
+                    ticket.batch_seq = seq
+                    ticket._resolve(table)
+        served_updates = 0
+        for t in updates:
+            try:
+                ack = ep.update(t.text)
+            except Exception as err:
                 t._reject(err)
-            self.stats.failed += len(batch)
-            return
+                self.stats.failed += 1
+            else:
+                t.batch_seq = seq
+                t._resolve(ack)
+                served_updates += 1
         dt = time.monotonic() - t0
-        for ticket, table in zip(batch, tables):
-            ticket.batch_seq = seq
-            ticket._resolve(table)
-        self.stats.completed += len(batch)
+        n_ok = len(reads) + served_updates
+        self.stats.completed += n_ok
         self.stats.batches += 1
         self.stats.max_coalesced = max(self.stats.max_coalesced,
                                        len(batch))

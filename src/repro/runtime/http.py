@@ -13,6 +13,11 @@ Routes (subset of the W3C SPARQL 1.1 Protocol):
   (integer id, routes ``mode="round"`` scheduling) parameters.
 - ``POST /sparql`` with ``application/sparql-query`` (raw query body) or
   ``application/x-www-form-urlencoded`` (``query=`` field).
+- ``POST /sparql`` with ``application/sparql-update`` (raw ``INSERT DATA``
+  / ``DELETE DATA`` / ``DELETE WHERE`` body) or a form ``update=`` field —
+  the write rides the same admission queue, serializing against the
+  micro-batch window it shares (reads first, then the write commits), and
+  returns a JSON ack (``inserted``/``deleted``/``new_terms``/...).
 - ``GET /stats`` — admission + engine counters as JSON.
 - ``GET /healthz`` — liveness probe.
 
@@ -92,11 +97,12 @@ class _Handler(BaseHTTPRequestHandler):
         pass                               # benches hammer this; stay quiet
 
     def _send(self, status: int, payload: dict,
-              extra_headers: dict | None = None) -> None:
+              extra_headers: dict | None = None,
+              ctype: str | None = None) -> None:
         body = json.dumps(payload).encode("utf-8")
         self.send_response(status)
-        self.send_header("Content-Type", RESULTS_JSON if status == 200
-                         else "application/json")
+        self.send_header("Content-Type", ctype or (
+            RESULTS_JSON if status == 200 else "application/json"))
         self.send_header("Content-Length", str(len(body)))
         for k, v in (extra_headers or {}).items():
             self.send_header(k, v)
@@ -140,15 +146,26 @@ class _Handler(BaseHTTPRequestHandler):
         params = parse_qs(url.query)
         if ctype == "application/sparql-query":
             query = body
+        elif ctype == "application/sparql-update":
+            if not body:
+                self._error(400, "missing update body")
+                return
+            self._serve_update(body, params)
+            return
         elif ctype == "application/x-www-form-urlencoded":
             form = parse_qs(body)
-            query = form.get("query", [None])[0]
             for k in ("timeout", "user"):      # form fields join URL params
                 if k in form:
                     params.setdefault(k, form[k])
+            update = form.get("update", [None])[0]
+            if update:
+                self._serve_update(update, params)
+                return
+            query = form.get("query", [None])[0]
         else:
             self._error(415, f"unsupported content type {ctype!r}; use "
-                        "application/sparql-query or "
+                        "application/sparql-query, "
+                        "application/sparql-update or "
                         "application/x-www-form-urlencoded")
             return
         if not query:
@@ -187,6 +204,39 @@ class _Handler(BaseHTTPRequestHandler):
             return
         self._send(200, ask_to_json(table) if is_ask
                    else table_to_json(table))
+
+    def _serve_update(self, text: str, params: dict) -> None:
+        """``application/sparql-update`` / form ``update=``: the write goes
+        through the SAME admission queue as queries — the ticket resolves
+        to the ingest ack only after every query sharing its micro-batch
+        window has read the pre-write store."""
+        front: SparqlHttpServer = self.server.front
+        try:
+            timeout = params.get("timeout", [None])[0]
+            timeout_s = float(timeout) if timeout is not None else None
+            user = int(params.get("user", ["0"])[0])
+        except ValueError:
+            self._error(400, "non-numeric 'timeout' or 'user' parameter")
+            return
+        try:
+            ack = front.queue.query(text, user=user, timeout_s=timeout_s)
+        except ParseError as err:
+            self._error(400, f"parse error: {err}")
+            return
+        except AdmissionFullError as err:
+            self._error(503, str(err),
+                        {"Retry-After": f"{err.retry_after_s:.3f}"})
+            return
+        except DeadlineExceeded as err:
+            self._error(504, str(err))
+            return
+        except AdmissionClosed:
+            self._error(503, "server shutting down")
+            return
+        except Exception as err:           # ingest-level failure
+            self._error(500, f"{type(err).__name__}: {err}")
+            return
+        self._send(200, dict(ack), ctype="application/json")
 
 
 class _Server(ThreadingHTTPServer):

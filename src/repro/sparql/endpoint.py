@@ -222,6 +222,47 @@ class SparqlEndpoint:
         """Run an ASK query (a SELECT is accepted too: non-empty result)."""
         return self._run([text])[0].num_matches > 0
 
+    # -- the write path ------------------------------------------------------
+    def update(self, text: str) -> dict:
+        """Execute a SPARQL UPDATE (``INSERT DATA`` / ``DELETE DATA`` /
+        ``DELETE WHERE``) and return an ack dict.
+
+        With an :class:`~repro.edge.system.EdgeCloudSystem` attached, the
+        write goes through ``system.apply_update`` — the single ingest path
+        (placement lock, id-stable shard routing, induced-memo
+        carry-forward, version-consistent edge propagation). A standalone
+        endpoint applies the delta directly to its store. Either way the
+        store version moves, so this endpoint's result memo
+        self-invalidates (version-keyed); new INSERT DATA terms bump the
+        dictionary version, invalidating the plan memo the same way.
+        """
+        from .query import parse_update
+        from .update import compile_update, ground_delta, where_evict_rows
+        parsed = parse_update(text, self.dictionary)
+        if self.system is not None:
+            rep = self.system.apply_update(parsed)
+            return {
+                "kind": rep.kind, "inserted": rep.n_add,
+                "deleted": rep.n_evict, "new_terms": rep.new_terms,
+                "dropped_rows": rep.dropped_rows,
+                "edges_updated": rep.edges_updated,
+                "shipped_bytes": rep.shipped_bytes,
+                "placement_epoch": rep.placement_epoch,
+            }
+        cu = compile_update(parsed, self.dictionary)
+        from ..rdf.deltas import TripleDelta
+        if cu.where is not None:
+            delta = TripleDelta(base_version=self.store.version,
+                                evict=where_evict_rows(cu, self.store))
+        else:
+            delta = ground_delta(cu, self.store)
+        if not delta.is_noop:
+            self.store.apply_delta(delta)
+        return {"kind": cu.kind, "inserted": delta.n_add,
+                "deleted": delta.n_evict, "new_terms": cu.new_terms,
+                "dropped_rows": cu.dropped_rows, "edges_updated": 0,
+                "shipped_bytes": 0, "placement_epoch": 0}
+
     @property
     def stats(self) -> EngineStats:
         return self.engine.stats

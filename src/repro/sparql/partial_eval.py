@@ -105,6 +105,12 @@ class PartialExecution:
     per_server_seconds: dict[int, float]
     fallback: bool = False             # stale placement -> ran at cloud
     per_server_bits: dict[int, float] = field(default_factory=dict)
+    # per-phase engine wall (prescan + join seconds) per server — the
+    # realized-latency input (repro.core.cost.measured_cycles): raw wall
+    # above includes coordinator Python overhead that would misprice the
+    # cloud assembly as from-scratch evaluation
+    per_server_engine_seconds: dict[int, float] = field(
+        default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
@@ -284,11 +290,20 @@ def execute_partial_batch(plans: list[PartialPlan], cloud_store, engine,
     per_secs: dict[int, dict[int, float]] = {i: {} for i in range(len(plans))}
     shipped: dict[int, float] = {i: 0.0 for i in range(len(plans))}
     per_bits: dict[int, dict[int, float]] = {i: {} for i in range(len(plans))}
+    per_eng: dict[int, dict[int, float]] = {i: {} for i in range(len(plans))}
+    stats = engine.stats
     for sid, batch in sorted(jobs.items()):
         store = cloud_store if sid == CLOUD else edges_by_id[sid].store
+        e0 = stats.prescan_seconds + stats.join_seconds
         t0 = time.perf_counter()
         outs = engine.execute_batch(store, [q for (_, _, q) in batch])
         dt = time.perf_counter() - t0
+        # per-phase engine wall, clamped to batch wall (the phase
+        # accumulators are shared across overlapped threads); the 1ns
+        # floor marks "measured (essentially free)" as distinct from
+        # "not measured" for measured_cycles' fallback
+        deng = max(min(stats.prescan_seconds + stats.join_seconds - e0,
+                       dt), 1e-9)
         per_plan = {}
         for (i, slot, _), res in zip(batch, outs):
             results[(i, slot)] = res
@@ -304,6 +319,8 @@ def execute_partial_batch(plans: list[PartialPlan], cloud_store, engine,
             # the servers' batched accounting convention
             per_secs[i][sid] = (per_secs[i].get(sid, 0.0)
                                 + dt / max(1, len(per_plan)))
+            per_eng[i][sid] = (per_eng[i].get(sid, 0.0)
+                               + deng / max(1, len(per_plan)))
 
     # ---- fallback: whole-query cloud execution ---------------------------
     fb_idx = [i for i in range(len(plans)) if stale[i]]
@@ -327,6 +344,7 @@ def execute_partial_batch(plans: list[PartialPlan], cloud_store, engine,
         for fi, frag in enumerate(plan.fragments):
             by_leaf.setdefault(frag.leaf_pos, []).append(
                 results[(i, ("frag", fi))])
+        a0 = stats.prescan_seconds + stats.join_seconds
         t_asm = time.perf_counter()
         if is_algebra_plan(root):
             leaves = root.bgp_leaves()
@@ -346,11 +364,15 @@ def execute_partial_batch(plans: list[PartialPlan], cloud_store, engine,
                 edge_ids=np.zeros((bindings.shape[0], 0), dtype=np.int64))
         # assembly runs at the cloud: charge its wall there, so per-server
         # walls honestly cover everything the coordinator did for this plan
-        per_secs[i][CLOUD] = (per_secs[i].get(CLOUD, 0.0)
-                              + time.perf_counter() - t_asm)
+        asm_wall = time.perf_counter() - t_asm
+        per_secs[i][CLOUD] = per_secs[i].get(CLOUD, 0.0) + asm_wall
+        per_eng[i][CLOUD] = (per_eng[i].get(CLOUD, 0.0) + max(
+            min(stats.prescan_seconds + stats.join_seconds - a0,
+                asm_wall), 1e-9))
         used = tuple(sorted(k for k in per_rows[i] if k >= 0))
         out.append(PartialExecution(
             result=final, servers=used, shipped_bits=shipped[i],
             per_server_rows=per_rows[i], per_server_seconds=per_secs[i],
-            per_server_bits=per_bits[i]))
+            per_server_bits=per_bits[i],
+            per_server_engine_seconds=per_eng[i]))
     return out

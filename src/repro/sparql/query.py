@@ -220,6 +220,23 @@ class ParsedQuery:
                 and not self.offset and self.where.is_plain_bgp())
 
 
+@dataclass
+class ParsedUpdate:
+    """Syntax-level SPARQL UPDATE AST (input to
+    ``repro.sparql.update.compile_update``).
+
+    ``kind`` is ``"insert_data"``, ``"delete_data"``, or ``"delete_where"``.
+    ``triples`` holds ``(s, p, o)`` tuples whose positions are tagged
+    ``("term", text)`` for constants (prefix-expanded term strings, NOT
+    dictionary ids — ``INSERT DATA`` may mention brand-new terms) or
+    ``("var", "?name")`` (``delete_where`` only).
+    """
+
+    kind: str
+    triples: list[tuple]
+    text: str = ""
+
+
 # ---------------------------------------------------------------------------
 # tokenizer
 # ---------------------------------------------------------------------------
@@ -240,7 +257,7 @@ _TOKEN_RE = re.compile(
 
 _KEYWORDS = {"select", "ask", "where", "filter", "optional", "union",
              "distinct", "order", "by", "asc", "desc", "limit", "offset",
-             "bound", "regex", "prefix"}
+             "bound", "regex", "prefix", "insert", "delete", "data"}
 
 
 def _tokenize(text: str) -> list[tuple[str, str]]:
@@ -335,7 +352,7 @@ class _Parser:
         return self.d.entity_id(term)
 
     # -- grammar ------------------------------------------------------------
-    def parse(self) -> ParsedQuery:
+    def parse_prologue(self) -> None:
         while self.at_keyword("prefix"):
             self.next()
             kind, txt = self.next()
@@ -345,6 +362,9 @@ class _Parser:
             if ikind != "iri":
                 raise ParseError(f"bad PREFIX IRI {itxt!r}")
             self.prefixes[txt[:-1]] = itxt[1:-1]
+
+    def parse(self) -> ParsedQuery:
+        self.parse_prologue()
 
         if self.at_keyword("ask"):
             self.next()
@@ -456,6 +476,60 @@ class _Parser:
                 o = self._decode_triple_term("o")
                 bgp.append(TriplePattern(s, p, o))
 
+    # -- UPDATE grammar -----------------------------------------------------
+    def parse_update(self) -> ParsedUpdate:
+        """``PREFIX* (INSERT DATA | DELETE DATA | DELETE WHERE) { ... }``."""
+        self.parse_prologue()
+        if self.at_keyword("insert"):
+            self.next()
+            self.expect_keyword("data")
+            kind = "insert_data"
+        elif self.at_keyword("delete"):
+            self.next()
+            if self.at_keyword("data"):
+                self.next()
+                kind = "delete_data"
+            elif self.at_keyword("where"):
+                self.next()
+                kind = "delete_where"
+            else:
+                raise ParseError("DELETE needs DATA { ... } or WHERE { ... }")
+        else:
+            raise ParseError("not an update (INSERT DATA / DELETE DATA / "
+                             "DELETE WHERE)")
+        triples = self.parse_data_block(allow_vars=(kind == "delete_where"))
+        if self.peek()[0] != "eof":
+            raise ParseError(f"trailing tokens: {self.peek()[1]!r}")
+        if kind == "delete_where" and not triples:
+            raise ParseError("DELETE WHERE needs at least one triple pattern")
+        return ParsedUpdate(kind=kind, triples=triples)
+
+    def parse_data_block(self, allow_vars: bool) -> list[tuple]:
+        """``{ (term term term .)* }`` — terms stay prefix-expanded strings
+        (no dictionary resolution: INSERT DATA may mint new terms)."""
+        self.expect_op("{")
+        triples: list[tuple] = []
+        while True:
+            if self.at_op("}"):
+                self.next()
+                return triples
+            if self.peek()[0] == "eof":
+                raise ParseError("unterminated data block (missing '}')")
+            if self.at_op("."):
+                self.next()         # triple separator (also allowed trailing)
+                continue
+            trip = []
+            for _ in ("s", "p", "o"):
+                kind, txt = self.next()
+                if kind == "var":
+                    if not allow_vars:
+                        raise ParseError(
+                            f"variables not allowed in ground data: {txt!r}")
+                    trip.append(("var", txt))
+                else:
+                    trip.append(("term", self._expand(kind, txt)))
+            triples.append(tuple(trip))
+
     # -- FILTER expressions -------------------------------------------------
     def parse_filter_expr(self):
         """``FILTER`` body: parenthesized expression or bare function call."""
@@ -555,6 +629,33 @@ def parse_query(text: str, dictionary: Dictionary) -> ParsedQuery:
     parse -> compile -> execute pipeline.
     """
     parsed = _Parser(text, dictionary).parse()
+    parsed.text = text
+    return parsed
+
+
+_UPDATE_HEAD_RE = re.compile(
+    r"^\s*(?:prefix\s+[A-Za-z_]\w*:[\w\-.]*\s*<[^<>\s]*>\s*)*(insert|delete)"
+    r"\b", re.IGNORECASE)
+
+
+def is_update_text(text: str) -> bool:
+    """Cheap syntactic router: does ``text`` start an UPDATE request
+    (after an optional PREFIX prologue) rather than a query?"""
+    return _UPDATE_HEAD_RE.match(text) is not None
+
+
+def parse_update(text: str, dictionary: Dictionary) -> ParsedUpdate:
+    """Parse ``INSERT DATA`` / ``DELETE DATA`` / ``DELETE WHERE`` into a
+    :class:`ParsedUpdate`.
+
+    Constants are kept as prefix-expanded term *strings* — unlike query
+    parsing, no dictionary lookup happens here, because ``INSERT DATA``
+    legitimately mentions terms the dictionary has never seen. Resolution
+    (and version bumps for new terms) happens in
+    :func:`repro.sparql.update.compile_update`.
+    """
+    p = _Parser(text, dictionary)
+    parsed = p.parse_update()
     parsed.text = text
     return parsed
 

@@ -1,0 +1,263 @@
+"""Live-ingest write path (PR 9): SPARQL UPDATE grammar + compilation,
+the cloud-side single ingest path (id-stable shard routing, memo /
+certificate invalidation only for touched patterns, version-consistent
+edge propagation), and the oracle-equivalence hammer — concurrent
+INSERT/DELETE traffic against query rounds on {numpy, jax} x {mono,
+sharded}, where every read must observe a fully-committed placement
+epoch and post-quiesce results must match a rebuilt-from-scratch store
+bit-for-bit."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cost import SystemParams
+from repro.core.pattern import pattern_of
+from repro.edge.system import EdgeCloudSystem
+from repro.rdf.deltas import TripleDelta
+from repro.rdf.dictionary import Dictionary
+from repro.rdf.generator import generate_watdiv_like, workload_sparql
+from repro.rdf.graph import TripleStore
+from repro.rdf.sharding import ShardedTripleStore
+from repro.sparql.endpoint import SparqlEndpoint
+from repro.sparql.query import (ParseError, is_update_text, parse_sparql,
+                                parse_update)
+from repro.sparql.update import (compile_update, ground_delta,
+                                 where_evict_rows)
+
+from test_engine import BACKENDS, sol_rows
+
+STORE_KINDS = ["mono", "sharded"]
+
+# per-edge resident leaves (same shape as the partial-eval suite): the
+# hammer's workload routes through edges AND cloud, so ingest must keep
+# every replica version-consistent for results to stay oracle-equal
+LEAVES = {
+    0: ["SELECT ?x ?p WHERE { ?x <likes> ?p }"],
+    1: ["SELECT ?p ?gn WHERE { ?p <hasGenre> ?gn }",
+        "SELECT ?x ?y WHERE { ?x <follows> ?y }"],
+    2: ["SELECT ?x ?c WHERE { ?x <country> ?c }"],
+}
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generate_watdiv_like(scale=0.5, seed=42)
+
+
+def fresh_store(g, kind):
+    """Copy the fixture's triples into a NEW store: ingest tests mutate."""
+    base = TripleStore(np.asarray(g.store.s).copy(),
+                       np.asarray(g.store.p).copy(),
+                       np.asarray(g.store.o).copy(),
+                       g.dictionary.num_entities,
+                       g.dictionary.num_predicates)
+    if kind == "sharded":
+        return ShardedTripleStore.from_store(base, num_shards=4)
+    return base
+
+
+def make_system(g, store, backend="numpy"):
+    K, N = 3, 4
+    params = SystemParams(
+        F=np.full(K, 1.0e9),
+        r_edge=np.full((N, K), 75e6),
+        r_cloud=np.full(N, 5e6),
+        assoc=np.ones((N, K), dtype=bool),
+        r_backhaul=np.full(K, 1e9),
+        F_cloud=0.05e9,
+    )
+    sys_ = EdgeCloudSystem(store, g.dictionary, params,
+                           storage_budgets=10_000_000, backend=backend)
+    for k, texts in LEAVES.items():
+        sys_.edges[k].deploy(store, [pattern_of(parse_sparql(
+            t, g.dictionary)) for t in texts])
+    return sys_
+
+
+# -- grammar / compilation ----------------------------------------------------
+def test_update_text_routing():
+    assert is_update_text("INSERT DATA { <a> <b> <c> }")
+    assert is_update_text("  delete data { <a> <b> <c> }")
+    assert is_update_text("PREFIX ex: <http://e/> "
+                          "DELETE WHERE { ex:a ?p ?o }")
+    assert not is_update_text("SELECT ?x WHERE { ?x <likes> ?y }")
+    assert not is_update_text("PREFIX ex: <http://e/> "
+                              "ASK { ex:a ex:b ex:c }")
+
+
+def test_update_parser_rejections():
+    d = Dictionary()
+    with pytest.raises(ParseError):        # variables in ground data
+        parse_update("INSERT DATA { ?x <likes> <a> }", d)
+    with pytest.raises(ParseError):        # not an update form
+        parse_update("SELECT ?x WHERE { ?x <likes> ?y }", d)
+    with pytest.raises(ParseError):        # DELETE WHERE needs a BGP
+        parse_update("DELETE WHERE { }", d)
+    with pytest.raises(ParseError):        # unterminated block
+        parse_update("INSERT DATA { <a> <b> <c>", d)
+    # DELETE WHERE accepts variables (it is a template, not ground data)
+    parsed = parse_update("DELETE WHERE { <a> ?p ?o }", d)
+    assert parsed.kind == "delete_where" and len(parsed.triples) == 1
+
+
+def test_compile_update_against_fresh_dictionary():
+    d = Dictionary()
+    cu = compile_update(parse_update(
+        "INSERT DATA { <a> <likes> <b> . <a> <likes> <b> }", d), d)
+    assert cu.kind == "insert_data"
+    assert len(cu.add) == 1                # ground duplicates collapse
+    assert cu.new_terms == 3               # a, likes, b minted once
+    # deleting terms the dictionary has never seen is a counted no-op
+    cu2 = compile_update(parse_update(
+        "DELETE DATA { <zz> <likes> <b> }", d), d)
+    assert cu2.is_noop and cu2.dropped_rows == 1
+
+
+# -- satellite (c): version bump + memo invalidation --------------------------
+def test_insert_new_terms_bumps_version_and_invalidates_memos():
+    g = generate_watdiv_like(scale=0.2, seed=9)
+    ep = SparqlEndpoint(g.store, g.dictionary)
+    q = "SELECT ?x ?p WHERE { ?x <likes> ?p }"
+    v0 = g.dictionary.version
+    n0 = ep.query(q).num_matches
+    h0 = ep.memo_hits
+    assert ep.query(q).num_matches == n0
+    assert ep.memo_hits == h0 + 1          # result LRU serves the repeat
+    ack = ep.update("INSERT DATA { <fresh_u> <likes> <fresh_p> }")
+    assert ack["new_terms"] == 2 and ack["inserted"] == 1
+    assert g.dictionary.version > v0       # new terms bump the version
+    # plan memo keys on (text, dictionary.version): the stale plan (with
+    # the old id space baked in) can no longer be served
+    ep.parse(q)
+    assert (q, g.dictionary.version) in ep._plans
+    # result LRU keys on (text, store.version): the pre-insert cached
+    # table must not be served post-insert
+    m0 = ep.memo_misses
+    t = ep.query(q)
+    assert ep.memo_misses == m0 + 1
+    assert t.num_matches == n0 + 1
+
+
+# -- raw delta ingest ---------------------------------------------------------
+@pytest.mark.parametrize("kind", STORE_KINDS)
+def test_apply_delta_raw_rows_and_idempotency(graph, kind):
+    g = graph
+    store = fresh_store(g, kind)
+    sys_ = make_system(g, store)
+    row = np.asarray(store.triples())[:1].copy()
+    v0 = store.version
+    rep = sys_.apply_delta(add=row)        # already present: no-op
+    assert rep.is_noop and store.version == v0
+    rep = sys_.apply_delta(evict=row)
+    assert rep.n_evict == 1 and store.version != v0
+    rep = sys_.apply_delta(add=row)
+    assert rep.n_add == 1
+    for es in sys_.edges:
+        if es.store is not None:
+            assert es.resident_cloud_version == store.version
+    assert sol_rows(sys_.engine.execute(
+        store, parse_sparql("SELECT ?x ?p WHERE { ?x <likes> ?p }",
+                            g.dictionary))) \
+        == sol_rows(sys_.engine.execute(
+            fresh_store(g, "mono"),
+            parse_sparql("SELECT ?x ?p WHERE { ?x <likes> ?p }",
+                         g.dictionary)))
+
+
+# -- the oracle-equivalence hammer --------------------------------------------
+def _update_stream(tag):
+    """Scripted mixed traffic: minted-term inserts, ground deletes of both
+    present and never-present rows, a re-insert (idempotent add), and a
+    variable-predicate DELETE WHERE (full memo invalidation path)."""
+    out = []
+    for i in range(6):
+        out.append(f"INSERT DATA {{ <{tag}_u{i}> <likes> <{tag}_p{i}> . "
+                   f"<{tag}_u{i}> <country> <{tag}_c{i % 2}> }}")
+    out.append(f"DELETE DATA {{ <{tag}_u1> <likes> <{tag}_p1> }}")
+    out.append(f"DELETE DATA {{ <{tag}_u1> <likes> <{tag}_p1> }}")  # gone
+    out.append(f"INSERT DATA {{ <{tag}_u1> <likes> <{tag}_p1> }}")
+    out.append(f"DELETE WHERE {{ <{tag}_u3> ?p ?o }}")
+    out.append(f"DELETE DATA {{ <{tag}_never> <likes> <{tag}_p0> }}")
+    return out
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("kind", STORE_KINDS)
+def test_ingest_oracle_equivalence_hammer(graph, backend, kind):
+    g = graph
+    store = fresh_store(g, kind)
+    sys_ = make_system(g, store, backend=backend)
+    initial = np.asarray(store.triples()).copy()
+    updates = _update_stream(f"w_{kind}_{backend}")
+    errors: list[BaseException] = []
+
+    def writer():
+        try:
+            for i, text in enumerate(updates):
+                sys_.apply_update(text)
+                if i == len(updates) // 2:
+                    # pipelined placement maintenance mid-stream: epochs
+                    # commit between the writes and the rounds below
+                    sys_.rebalance_pipeline(epochs=2)
+                time.sleep(0.002)
+        except BaseException as err:       # re-raised by the main thread
+            errors.append(err)
+
+    th = threading.Thread(target=writer, name="ingest-writer")
+    th.start()
+    texts = workload_sparql(g, 8, seed=3)
+    rounds = 0
+    deadline = time.monotonic() + 60.0
+    while (th.is_alive() or rounds < 3) and time.monotonic() < deadline:
+        queries = [(i % sys_.params.N, parse_sparql(t, g.dictionary))
+                   for i, t in enumerate(texts)]
+        # the placement lock is reentrant: holding it here makes the round
+        # + the cloud oracle + the consistency probes ONE atomic read —
+        # any concurrent write/rebalance commits strictly before or after
+        with sys_._placement_lock:
+            e0, v0 = sys_.placement_epoch, store.version
+            rep = sys_.run_round_batched(queries, policy="greedy",
+                                         execute=True,
+                                         collect_results=True)
+            oracle = [sys_.engine.execute(store, q) for _, q in queries]
+            # a read never observes a half-applied placement: the epoch
+            # and cloud version are stable across the round, and every
+            # populated edge replica is at the cloud's exact version
+            assert sys_.placement_epoch == e0
+            assert store.version == v0
+            for es in sys_.edges:
+                if es.store is not None:
+                    assert es.resident_cloud_version == store.version
+        for res, want in zip(rep.results, oracle):
+            assert sol_rows(res) == sol_rows(want)
+        rounds += 1
+    th.join(30.0)
+    assert not th.is_alive(), "writer wedged"
+    assert not errors, errors
+    assert rounds >= 3
+
+    # post-quiesce: rebuild from scratch (initial rows + the same update
+    # stream replayed against the now-final dictionary) and compare the
+    # triple sets and query answers bit-for-bit
+    rebuilt = TripleStore(initial[:, 0].copy(), initial[:, 1].copy(),
+                          initial[:, 2].copy(),
+                          g.dictionary.num_entities,
+                          g.dictionary.num_predicates)
+    for text in updates:
+        cu = compile_update(parse_update(text, g.dictionary), g.dictionary)
+        if cu.kind == "delete_where":
+            delta = TripleDelta(base_version=rebuilt.version,
+                                evict=where_evict_rows(cu, rebuilt))
+        else:
+            delta = ground_delta(cu, rebuilt)
+        if not delta.is_noop:
+            rebuilt.apply_delta(delta)
+    got = np.unique(np.asarray(store.triples()), axis=0)
+    want = np.unique(np.asarray(rebuilt.triples()), axis=0)
+    assert np.array_equal(got, want)
+    for _, q in [(0, parse_sparql(t, g.dictionary)) for t in texts]:
+        assert sol_rows(sys_.engine.execute(store, q)) \
+            == sol_rows(sys_.engine.execute(rebuilt, q))
