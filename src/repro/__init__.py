@@ -13,6 +13,7 @@ Layers
 - ``repro.models``   : LM / GNN / recsys model zoo (10 assigned architectures)
 - ``repro.kernels``  : Pallas TPU kernels (validated via interpret mode on CPU)
 - ``repro.runtime``  : train/serve loops, checkpointing, fault tolerance
+- ``repro.workload`` : subgraph-sampling workload generator + traffic harness
 - ``repro.launch``   : production mesh + multi-pod dry-run drivers
 
 Public query API
@@ -43,6 +44,11 @@ _LAZY = {
     "parse_sparql": ("repro.sparql.query", "parse_sparql"),
     "AdmissionQueue": ("repro.runtime.admission", "AdmissionQueue"),
     "SparqlHttpServer": ("repro.runtime.http", "SparqlHttpServer"),
+    "PatternSampler": ("repro.workload", "PatternSampler"),
+    "ShapeConfig": ("repro.workload", "ShapeConfig"),
+    "TrafficConfig": ("repro.workload", "TrafficConfig"),
+    "build_schedule": ("repro.workload", "build_schedule"),
+    "replay": ("repro.workload", "replay"),
 }
 
 

@@ -65,6 +65,33 @@ def as_rows(x: np.ndarray) -> np.ndarray:
     return np.ascontiguousarray(x)
 
 
+def member_rows(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Boolean mask over ``a``'s rows: which appear in ``b``.
+
+    Bytewise row membership (one void view + sorted ``searchsorted``) —
+    the primitive both delete acks and coalesced-commit bookkeeping use.
+    """
+    a, b = as_rows(a), as_rows(b)
+    if len(a) == 0 or len(b) == 0:
+        return np.zeros(len(a), dtype=bool)
+    void = np.dtype((np.void, a.dtype.itemsize * 3))
+    av = np.ascontiguousarray(a).view(void).ravel()
+    bv = np.sort(np.ascontiguousarray(b).view(void).ravel())
+    pos = np.searchsorted(bv, av)
+    pos[pos == len(bv)] = len(bv) - 1
+    return bv[pos] == av
+
+
+def union_rows(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Deduplicated row-set union of two ``[N, 3]`` arrays."""
+    a, b = as_rows(a), as_rows(b)
+    if len(a) == 0:
+        return np.unique(b, axis=0) if len(b) else b
+    if len(b) == 0:
+        return np.unique(a, axis=0)
+    return np.unique(np.concatenate([a, b]), axis=0)
+
+
 def setdiff_rows(a: np.ndarray, b: np.ndarray) -> np.ndarray:
     """Rows of ``a`` not present in ``b`` (both deduplicated ``[N, 3]``).
 

@@ -121,6 +121,12 @@ class BatchStats:
     memo_hits: int                # endpoint full-result memo hits (delta)
     engine_cache_hits: int        # engine result-cache hits (delta)
     scans_deduped: int            # engine scan dedups (delta)
+    write_commits: int = 0        # store commits this window's writes took
+    # scheduler provenance (mode="round"/"pool" only): per-assignment
+    # counts (-1 cloud, -2 partial, k per edge/replica) and the modeled
+    # scheduling objective of the window's read batch
+    assignment_counts: dict | None = None
+    objective: float | None = None
 
 
 @dataclass
@@ -134,12 +140,22 @@ class AdmissionStats:
     failed: int = 0               # engine errors
     batches: int = 0
     max_coalesced: int = 0        # largest batch dispatched
+    updates_served: int = 0       # update tickets acked
+    write_commits: int = 0        # store commits those updates took
+    # lifetime scheduler-decision totals (round/pool modes): assignment
+    # sentinel (-1 cloud, -2 partial, k per edge) -> queries routed there
+    assignment_counts: dict = field(default_factory=dict)
     recent: list = field(default_factory=list)   # last BatchStats
 
     @property
     def mean_batch_size(self) -> float:
         served = self.completed + self.failed
         return served / self.batches if self.batches else 0.0
+
+    @property
+    def writes_coalesced(self) -> int:
+        """Commits amortized away by window-level write coalescing."""
+        return self.updates_served - self.write_commits
 
     def as_dict(self) -> dict:
         return {
@@ -148,6 +164,11 @@ class AdmissionStats:
             "failed": self.failed, "batches": self.batches,
             "max_coalesced": self.max_coalesced,
             "mean_batch_size": round(self.mean_batch_size, 3),
+            "updates_served": self.updates_served,
+            "write_commits": self.write_commits,
+            "writes_coalesced": self.writes_coalesced,
+            "assignment_counts": {str(k): v for k, v in
+                                  sorted(self.assignment_counts.items())},
         }
 
 
@@ -181,6 +202,13 @@ class AdmissionQueue:
         is exponential in batch size). Ignored by ``mode="endpoint"``.
     retry_after_s : float
         Suggested client back-off carried by :class:`AdmissionFullError`.
+    coalesce_writes : bool
+        Merge each window's ground updates (``INSERT DATA`` / ``DELETE
+        DATA``) into ONE store commit via ``endpoint.update_many`` —
+        arrival-order semantics and per-ticket failure isolation are
+        preserved, but remap/edge-propagation cost is paid once per window
+        instead of once per write. ``DELETE WHERE`` still commits
+        individually at its arrival position.
     """
 
     def __init__(self, endpoint, *, window_s: float = 0.002,
@@ -188,7 +216,8 @@ class AdmissionQueue:
                  default_timeout_s: float | None = None,
                  mode: str = "endpoint",
                  mode_kw: dict | None = None,
-                 retry_after_s: float = 0.05) -> None:
+                 retry_after_s: float = 0.05,
+                 coalesce_writes: bool = False) -> None:
         if mode not in ("endpoint", "round", "pool"):
             raise ValueError(f"unknown admission mode {mode!r}")
         if mode == "round" and endpoint.system is None:
@@ -205,6 +234,7 @@ class AdmissionQueue:
         self.mode = mode
         self.mode_kw = dict(mode_kw or {})
         self.retry_after_s = float(retry_after_s)
+        self.coalesce_writes = bool(coalesce_writes)
         self.stats = AdmissionStats()
         self._queue: list[Ticket] = []
         self._cond = threading.Condition()
@@ -347,7 +377,14 @@ class AdmissionQueue:
         so reads in the window observe one consistent store version, and
         the write's version bump (store, and dictionary for new terms)
         invalidates exactly the memos it should for the NEXT window. A
-        failing update rejects only its own ticket.
+        failing update rejects only its own ticket (with
+        ``coalesce_writes``, a failing *commit* rejects its whole
+        coalesced group — see ``SparqlEndpoint.update_many``).
+
+        In ``mode="round"`` / ``mode="pool"`` the scheduler's per-window
+        decisions (full-edge / cloud / partial counts, modeled objective)
+        are captured into :class:`BatchStats` and aggregated into
+        :class:`AdmissionStats.assignment_counts`.
         """
         ep = self.endpoint
         reads = [t for t in batch if not t.is_update]
@@ -358,6 +395,9 @@ class AdmissionQueue:
         memo0 = ep.memo_hits
         hits0 = ep.stats.cache_hits
         dedup0 = ep.stats.scans_deduped
+        commits0 = ep.write_commits
+        assignment_counts: dict | None = None
+        objective: float | None = None
         t0 = time.monotonic()
         if reads:
             rtexts = [t.text for t in reads]
@@ -367,9 +407,14 @@ class AdmissionQueue:
                         [(t.user, t.text) for t in reads],
                         collect_results=True, **self.mode_kw)
                     tables = report.results
+                    assignment_counts = dict(report.assignment_counts)
+                    objective = float(report.objective)
                 elif self.mode == "pool":
                     served = ep.admit_many(rtexts, **self.mode_kw)
                     tables = served.responses
+                    ks, ns = _np_unique(served.assignments)
+                    assignment_counts = dict(zip(ks, ns))
+                    objective = float(served.objective)
                 else:
                     tables = ep.query_many(rtexts)
             except Exception as err:           # engine-level failure:
@@ -382,22 +427,39 @@ class AdmissionQueue:
                     ticket.batch_seq = seq
                     ticket._resolve(table)
         served_updates = 0
-        for t in updates:
-            try:
-                ack = ep.update(t.text)
-            except Exception as err:
-                t._reject(err)
-                self.stats.failed += 1
-            else:
-                t.batch_seq = seq
-                t._resolve(ack)
-                served_updates += 1
+        if updates and self.coalesce_writes:
+            outs = ep.update_many([t.text for t in updates])
+            for t, out in zip(updates, outs):
+                if isinstance(out, BaseException):
+                    t._reject(out)
+                    self.stats.failed += 1
+                else:
+                    t.batch_seq = seq
+                    t._resolve(out)
+                    served_updates += 1
+        else:
+            for t in updates:
+                try:
+                    ack = ep.update(t.text)
+                except Exception as err:
+                    t._reject(err)
+                    self.stats.failed += 1
+                else:
+                    t.batch_seq = seq
+                    t._resolve(ack)
+                    served_updates += 1
         dt = time.monotonic() - t0
         n_ok = len(reads) + served_updates
         self.stats.completed += n_ok
         self.stats.batches += 1
         self.stats.max_coalesced = max(self.stats.max_coalesced,
                                        len(batch))
+        self.stats.updates_served += served_updates
+        self.stats.write_commits += ep.write_commits - commits0
+        if assignment_counts:
+            for k, n in assignment_counts.items():
+                self.stats.assignment_counts[int(k)] = \
+                    self.stats.assignment_counts.get(int(k), 0) + int(n)
         bs = BatchStats(
             seq=seq, size=len(batch), unique_texts=len(set(texts)),
             expired=getattr(self, "_expired_last", 0),
@@ -408,6 +470,16 @@ class AdmissionQueue:
             exec_seconds=dt,
             memo_hits=ep.memo_hits - memo0,
             engine_cache_hits=ep.stats.cache_hits - hits0,
-            scans_deduped=ep.stats.scans_deduped - dedup0)
+            scans_deduped=ep.stats.scans_deduped - dedup0,
+            write_commits=ep.write_commits - commits0,
+            assignment_counts=assignment_counts,
+            objective=objective)
         self.stats.recent.append(bs)
         del self.stats.recent[:-_RECENT_BATCHES]
+
+
+def _np_unique(assignments):
+    import numpy as np
+    ks, ns = np.unique(np.asarray(assignments, dtype=np.int64),
+                       return_counts=True)
+    return [int(k) for k in ks], [int(n) for n in ns]

@@ -23,6 +23,11 @@ Operator tree (:func:`compile_query` lowers a
   equi-join over composite keys; rows with unbound shared variables
   (possible under nested OPTIONAL / UNION) join per bound-mask group.
 - :class:`UnionNode` — column-aligned concatenation (multiset union).
+- :class:`ValuesNode` — an inline solution table (``VALUES``): the parsed
+  binding rows become a constant :class:`SolutionTable` (``UNDEF`` cells
+  are :data:`UNBOUND`) joined into its group through the same vectorized
+  compatibility join as any other operand — an UNDEF cell is compatible
+  with every binding, exactly the bound-mask group-join semantics below.
 - :class:`FilterNode` — vectorized row mask from the expression AST
   (:class:`~repro.sparql.query.Comparison` / ``BOUND`` / ``REGEX`` /
   boolean connectives) over dictionary-decoded terms.
@@ -252,6 +257,26 @@ class UnionNode(Node):
 
 
 @dataclass
+class ValuesNode(Node):
+    """Inline bindings (``VALUES``): a constant solution multiset.
+
+    ``rows`` is ``[R, V]`` int64 over ``var_names`` with :data:`UNBOUND`
+    for ``UNDEF`` cells. Not a BGP leaf: it never reaches the engine, so
+    edge feasibility ignores it (the inline table is part of the plan and
+    travels with it to whichever server executes)."""
+
+    var_names: list[str]
+    rows: np.ndarray
+
+    def children(self) -> list[Node]:
+        return []
+
+    def label(self) -> str:
+        return (f"Values([{' '.join(self.var_names)}], "
+                f"{len(self.rows)} rows)")
+
+
+@dataclass
 class FilterNode(Node):
     child: Node
     expr: object
@@ -362,6 +387,10 @@ def compile_query(parsed: ParsedQuery,
                     ent_vars.add(t)
             if isinstance(tp.p, str):
                 pred_vars.add(tp.p)
+    # VALUES cells are resolved in entity-id space at parse time, so their
+    # variables are entity-space by construction
+    for vn in _values_nodes(root):
+        ent_vars.update(vn.var_names)
     mixed = ent_vars & pred_vars
     if mixed:
         # entity and predicate ids live in disjoint spaces; a column mixing
@@ -373,6 +402,13 @@ def compile_query(parsed: ParsedQuery,
             f"are disjoint)")
     root.pred_vars = frozenset(pred_vars)
     return root
+
+
+def _values_nodes(node: Node) -> list["ValuesNode"]:
+    out = [node] if isinstance(node, ValuesNode) else []
+    for c in node.children():
+        out += _values_nodes(c)
+    return out
 
 
 def _compile_group(g: GroupPattern) -> Node:
@@ -396,6 +432,15 @@ def _compile_group(g: GroupPattern) -> Node:
             node = join(node, UnionNode([_compile_group(b) for b in el[1]]))
         elif tag == "group":
             node = join(node, _compile_group(el[1]))
+        elif tag == "values":
+            var_names, raw = el[1], el[2]
+            rows = np.full((len(raw), len(var_names)), UNBOUND,
+                           dtype=np.int64)
+            for i, row in enumerate(raw):
+                for j, cell in enumerate(row):
+                    if cell is not None:
+                        rows[i, j] = cell
+            node = join(node, ValuesNode(list(var_names), rows))
         else:  # pragma: no cover - parser emits only the tags above
             raise ValueError(f"unknown group element {tag!r}")
     if node is None:
@@ -781,6 +826,11 @@ def _eval(node: Node, leaf_results: dict[int, MatchResult], engine,
             t = _from_match(leaf_results[id(node)], pred_vars)
         t.dictionary = d
         return t
+    if isinstance(node, ValuesNode):
+        if engine is not None:
+            engine.bump_stats(values_joins=1)
+        return SolutionTable(list(node.var_names), node.rows,
+                             dictionary=d)
     if isinstance(node, JoinNode):
         return _join_tables(
             _eval(node.left, leaf_results, engine, d, pred_vars, max_rows),

@@ -39,6 +39,8 @@ from __future__ import annotations
 import threading
 from collections import OrderedDict
 
+import numpy as np
+
 from ..rdf.dictionary import Dictionary
 from ..rdf.graph import RDFStore
 from .algebra import (AskNode, Node, SolutionTable, compile_query,
@@ -104,6 +106,10 @@ class SparqlEndpoint:
         self._result_cache_size = int(result_cache_size)
         self._result_cache_bytes = int(result_cache_bytes)
         self._result_bytes = 0
+        # store commits performed by the write path (one per applied
+        # delta) — the admission layer reads the delta to report how many
+        # commits a coalesced window amortized away
+        self.write_commits = 0
 
     # -- parsing / planning --------------------------------------------------
     def parse(self, text: str) -> Node:
@@ -237,10 +243,11 @@ class SparqlEndpoint:
         dictionary version, invalidating the plan memo the same way.
         """
         from .query import parse_update
-        from .update import compile_update, ground_delta, where_evict_rows
+        from .update import compile_update
         parsed = parse_update(text, self.dictionary)
         if self.system is not None:
             rep = self.system.apply_update(parsed)
+            self.write_commits += 1
             return {
                 "kind": rep.kind, "inserted": rep.n_add,
                 "deleted": rep.n_evict, "new_terms": rep.new_terms,
@@ -249,8 +256,14 @@ class SparqlEndpoint:
                 "shipped_bytes": rep.shipped_bytes,
                 "placement_epoch": rep.placement_epoch,
             }
-        cu = compile_update(parsed, self.dictionary)
+        return self._apply_standalone(compile_update(parsed,
+                                                     self.dictionary))
+
+    def _apply_standalone(self, cu) -> dict:
+        """Apply one compiled update directly to the endpoint's store (no
+        system attached)."""
         from ..rdf.deltas import TripleDelta
+        from .update import ground_delta, where_evict_rows
         if cu.where is not None:
             delta = TripleDelta(base_version=self.store.version,
                                 evict=where_evict_rows(cu, self.store))
@@ -258,10 +271,134 @@ class SparqlEndpoint:
             delta = ground_delta(cu, self.store)
         if not delta.is_noop:
             self.store.apply_delta(delta)
+        self.write_commits += 1
         return {"kind": cu.kind, "inserted": delta.n_add,
                 "deleted": delta.n_evict, "new_terms": cu.new_terms,
                 "dropped_rows": cu.dropped_rows, "edges_updated": 0,
                 "shipped_bytes": 0, "placement_epoch": 0}
+
+    def update_many(self, texts: list[str]) -> list:
+        """Execute a window of updates in arrival order, **coalescing**
+        consecutive ground updates (``INSERT DATA`` / ``DELETE DATA``) into
+        ONE store commit — the admission queue's write-batching path
+        (ROADMAP live-ingest follow-on (b)).
+
+        Returns one entry per text, position-aligned: an ack dict (as
+        :meth:`update` returns, plus ``"coalesced"`` — the commit group
+        size) or the exception that text failed with. Semantics:
+
+        - **arrival order**: each ground run folds into net add/evict row
+          sets with sequential override (a later delete of an inserted row
+          cancels it); per-text ``inserted`` / ``deleted`` counts are
+          computed against the *effective* store content at that text's
+          position, so acks match what sequential application would report.
+        - ``DELETE WHERE`` cannot be folded (its evict set depends on the
+          live store), so it flushes the pending group first and runs
+          individually at its position.
+        - **failure isolation**: a text that fails to parse/compile rejects
+          only itself; the rest of the window still commits. A failing
+          *commit* rejects every text of its group (their effects are one
+          delta — none applied).
+
+        The one-commit guarantee is what amortizes remap/propagation: with
+        a system attached the whole group is one ``system.apply_delta``
+        (one placement-lock round, one induced-memo carry-forward, one
+        version-consistent edge propagation) instead of one per text.
+        """
+        from ..rdf.deltas import member_rows, setdiff_rows, union_rows
+        from .query import parse_update
+        from .update import compile_update
+        results: list = [None] * len(texts)
+        group: list[tuple[int, object]] = []   # (text idx, CompiledUpdate)
+
+        def flush() -> None:
+            if not group:
+                return
+            idxs = [i for i, _ in group]
+            cus = [cu for _, cu in group]
+            group.clear()
+            # fold the run into net row sets, acking each update against
+            # the effective content at its position
+            cur = self.store.triples()
+            net_add = np.zeros((0, 3), dtype=np.int64)
+            net_evict = np.zeros((0, 3), dtype=np.int64)
+            acks = []
+            for cu in cus:
+                ev = cu.evict
+                hit = ((member_rows(ev, cur) & ~member_rows(ev, net_evict))
+                       | member_rows(ev, net_add))
+                deleted = int(hit.sum())
+                if len(ev):
+                    net_add = setdiff_rows(net_add, ev)
+                    net_evict = union_rows(net_evict, ev)
+                ad = cu.add
+                have = ((member_rows(ad, cur) & ~member_rows(ad, net_evict))
+                        | member_rows(ad, net_add))
+                inserted = int(len(ad) - have.sum())
+                if len(ad):
+                    net_evict = setdiff_rows(net_evict, ad)
+                    net_add = union_rows(net_add, ad)
+                acks.append({"kind": cu.kind, "inserted": inserted,
+                             "deleted": deleted, "new_terms": cu.new_terms,
+                             "dropped_rows": cu.dropped_rows,
+                             "coalesced": len(cus)})
+            try:
+                if self.system is not None:
+                    rep = self.system.apply_delta(add=net_add,
+                                                  evict=net_evict)
+                    extra = {"edges_updated": rep.edges_updated,
+                             "shipped_bytes": rep.shipped_bytes,
+                             "placement_epoch": rep.placement_epoch}
+                else:
+                    from ..rdf.deltas import TripleDelta
+                    delta = TripleDelta(
+                        base_version=self.store.version,
+                        add=setdiff_rows(net_add, cur),
+                        evict=net_evict[member_rows(net_evict, cur)])
+                    if not delta.is_noop:
+                        self.store.apply_delta(delta)
+                    extra = {"edges_updated": 0, "shipped_bytes": 0,
+                             "placement_epoch": 0}
+                self.write_commits += 1
+            except Exception as err:   # one delta: the whole group fails
+                for i in idxs:
+                    results[i] = err
+                return
+            for i, ack in zip(idxs, acks):
+                ack.update(extra)
+                results[i] = ack
+
+        for i, text in enumerate(texts):
+            try:
+                cu = compile_update(parse_update(text, self.dictionary),
+                                    self.dictionary)
+            except Exception as err:
+                results[i] = err
+                continue
+            if cu.where is not None:
+                flush()                # preserve arrival order around it
+                try:
+                    if self.system is not None:
+                        rep = self.system.apply_update(cu)
+                        self.write_commits += 1
+                        results[i] = {
+                            "kind": rep.kind, "inserted": rep.n_add,
+                            "deleted": rep.n_evict,
+                            "new_terms": rep.new_terms,
+                            "dropped_rows": rep.dropped_rows,
+                            "edges_updated": rep.edges_updated,
+                            "shipped_bytes": rep.shipped_bytes,
+                            "placement_epoch": rep.placement_epoch,
+                            "coalesced": 1}
+                    else:
+                        results[i] = self._apply_standalone(cu)
+                        results[i]["coalesced"] = 1
+                except Exception as err:
+                    results[i] = err
+            else:
+                group.append((i, cu))
+        flush()
+        return results
 
     @property
     def stats(self) -> EngineStats:

@@ -543,7 +543,8 @@ class EngineStats:
     algebra plans (each also counts once in ``queries``);
     ``filters_applied`` / ``optional_joins`` — FILTER / OPTIONAL
     (left-join) operator applications; ``union_branches`` — branches
-    fed into UNION concatenations.
+    fed into UNION concatenations; ``values_joins`` — inline VALUES
+    tables materialized into joins.
 
     Device-residency counters: ``backend_mode`` is the resolved execution
     mode (``"numpy"``, ``"jax-interpret"``, ``"jax-compiled"``).
@@ -581,6 +582,7 @@ class EngineStats:
     filters_applied: int = 0
     optional_joins: int = 0
     union_branches: int = 0
+    values_joins: int = 0
     backend_mode: str = ""
     device_queries: int = 0
     device_fallbacks: int = 0

@@ -10,7 +10,9 @@ understands the algebra surface compiled by
 - ``SELECT [DISTINCT] ?v ... | *`` and ``ASK`` query forms;
 - group graph patterns with ``FILTER`` (comparisons ``= != < <= > >=``,
   ``&& || !``, ``BOUND(?v)``, ``REGEX(?v, "pat"[, "i"])``), ``OPTIONAL``
-  groups, ``{ A } UNION { B }`` chains, and nested groups;
+  groups, ``{ A } UNION { B }`` chains, nested groups, and inline
+  ``VALUES`` data blocks (``VALUES ?v { t ... }`` and
+  ``VALUES (?v ?w) { (t t) (UNDEF t) ... }``);
 - solution modifiers ``ORDER BY [ASC|DESC](?v)``, ``LIMIT`` / ``OFFSET``.
 
 Input is **tokenized first** (strings, IRIs, vars, numbers, prefixed names,
@@ -190,8 +192,10 @@ class GroupPattern:
     Elements are tagged tuples —
     ``("bgp", [TriplePattern, ...])``, ``("filter", expr)``,
     ``("optional", GroupPattern)``, ``("union", [GroupPattern, ...])``,
-    ``("group", GroupPattern)``. Consecutive triple patterns accumulate into
-    one ``"bgp"`` element (one BGP leaf after compilation).
+    ``("group", GroupPattern)``, ``("values", [var, ...], [row, ...])``
+    where each VALUES row is a tuple of entity ids with ``None`` for
+    ``UNDEF`` cells. Consecutive triple patterns accumulate into one
+    ``"bgp"`` element (one BGP leaf after compilation).
     """
 
     elements: list = field(default_factory=list)
@@ -257,7 +261,8 @@ _TOKEN_RE = re.compile(
 
 _KEYWORDS = {"select", "ask", "where", "filter", "optional", "union",
              "distinct", "order", "by", "asc", "desc", "limit", "offset",
-             "bound", "regex", "prefix", "insert", "delete", "data"}
+             "bound", "regex", "prefix", "insert", "delete", "data",
+             "values", "undef"}
 
 
 def _tokenize(text: str) -> list[tuple[str, str]]:
@@ -456,6 +461,10 @@ class _Parser:
             if self.at_keyword("filter"):
                 self.next()
                 g.elements.append(("filter", self.parse_filter_expr()))
+            elif self.at_keyword("values"):
+                self.next()
+                flush()
+                g.elements.append(self.parse_values())
             elif self.at_keyword("optional"):
                 self.next()
                 flush()
@@ -475,6 +484,63 @@ class _Parser:
                 p = self._decode_triple_term("p")
                 o = self._decode_triple_term("o")
                 bgp.append(TriplePattern(s, p, o))
+
+    def parse_values(self) -> tuple:
+        """``VALUES ?v { term ... }`` or ``VALUES (?v ...) { (term ...) ... }``.
+
+        Terms resolve to entity ids at parse time (a VALUES binding naming a
+        term the dictionary has never seen can match nothing anywhere — same
+        contract as triple constants, and it keeps the inline table in the
+        engine's id space). ``UNDEF`` cells become ``None`` (compiled to
+        :data:`repro.sparql.algebra.UNBOUND`, so they are compatible with
+        any binding in the join).
+        """
+        vars_: list[str] = []
+        grouped = self.at_op("(")
+        if grouped:
+            self.next()
+            while self.peek()[0] == "var":
+                vars_.append(self.next()[1])
+            self.expect_op(")")
+        elif self.peek()[0] == "var":
+            vars_.append(self.next()[1])
+        if not vars_:
+            raise ParseError("VALUES needs ?vars")
+        if len(set(vars_)) != len(vars_):
+            raise ParseError("duplicate variable in VALUES")
+        self.expect_op("{")
+        rows: list[tuple] = []
+        while not self.at_op("}"):
+            if self.peek()[0] == "eof":
+                raise ParseError("unterminated VALUES block (missing '}')")
+            if grouped:
+                self.expect_op("(")
+                row: list[int | None] = []
+                while not self.at_op(")"):
+                    if self.peek()[0] == "eof":
+                        raise ParseError("unterminated VALUES row "
+                                         "(missing ')')")
+                    row.append(self._values_cell())
+                self.next()
+                if len(row) != len(vars_):
+                    raise ParseError(
+                        f"VALUES row has {len(row)} terms for "
+                        f"{len(vars_)} variables")
+                rows.append(tuple(row))
+            else:
+                rows.append((self._values_cell(),))
+        self.next()
+        return ("values", vars_, rows)
+
+    def _values_cell(self) -> int | None:
+        if self.at_keyword("undef"):
+            self.next()
+            return None
+        kind, txt = self.next()
+        term = self._expand(kind, txt)
+        if not self.d.has_entity(term):
+            raise ParseError(f"unknown entity {term!r} in VALUES")
+        return self.d.entity_id(term)
 
     # -- UPDATE grammar -----------------------------------------------------
     def parse_update(self) -> ParsedUpdate:

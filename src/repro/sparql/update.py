@@ -164,15 +164,8 @@ def ground_delta(cu: CompiledUpdate, store) -> TripleDelta:
 
 def _present_mask(rows: np.ndarray, current: np.ndarray) -> np.ndarray:
     """Boolean mask of ``rows`` present in ``current`` (both [N, 3])."""
-    if not len(rows) or not len(current):
-        return np.zeros(len(rows), dtype=bool)
-    absent = setdiff_rows(rows, current)
-    if not len(absent):
-        return np.ones(len(rows), dtype=bool)
-    void = np.dtype((np.void, rows.dtype.itemsize * 3))
-    a = np.ascontiguousarray(rows).view(void).ravel()
-    b = np.sort(np.ascontiguousarray(absent).view(void).ravel())
-    return ~np.isin(a, b)
+    from ..rdf.deltas import member_rows
+    return member_rows(rows, current)
 
 
 def where_evict_rows(cu: CompiledUpdate, store,

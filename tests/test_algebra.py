@@ -33,11 +33,12 @@ from repro.rdf.graph import TripleStore
 from repro.rdf.sharding import ShardedTripleStore
 from repro.runtime.serving import (OffloadServingPool, Replica,
                                    make_sparql_runner)
-from repro.sparql.algebra import (AskNode, BGPNode, DistinctNode, FilterNode,
-                                  JoinNode, OptionalNode, OrderSliceNode,
-                                  ProjectNode, UnionNode, _term_key,
-                                  compare_terms, compile_query,
-                                  evaluate_many, evaluate_plan, explain_plan)
+from repro.sparql.algebra import (UNBOUND, AskNode, BGPNode, DistinctNode,
+                                  FilterNode, JoinNode, OptionalNode,
+                                  OrderSliceNode, ProjectNode, UnionNode,
+                                  ValuesNode, _term_key, compare_terms,
+                                  compile_query, evaluate_many,
+                                  evaluate_plan, explain_plan)
 from repro.sparql.endpoint import SparqlEndpoint
 from repro.sparql.engine import QueryEngine
 from repro.sparql.matcher import match_oracle
@@ -177,6 +178,9 @@ def ref_eval(root, store):
             for b in node.branches:
                 out += walk(b)
             return out
+        if isinstance(node, ValuesNode):
+            return [{v: int(c) for v, c in zip(node.var_names, row)
+                     if c != UNBOUND} for row in node.rows]
         if isinstance(node, FilterNode):
             return [e for e in walk(node.child) if ref_expr(node.expr, e)]
         if isinstance(node, ProjectNode):
@@ -268,6 +272,16 @@ MATRIX_QUERIES = [
     'SELECT ?p WHERE { ?p <tag> "sale item v1.0" }',
     'SELECT ?p WHERE { ?p <tag> "odd;tag" }',
     'SELECT ?p WHERE { ?p <tag> "q?mark {brace}" }',
+    # VALUES: single-var, grouped rows, UNDEF compatibility, interaction
+    # with OPTIONAL/UNION, and an unmatchable binding
+    'SELECT ?a ?b WHERE { VALUES ?a { <alice> <bob> } ?a <knows> ?b }',
+    'SELECT ?a ?p WHERE { ?a <likes> ?p . '
+    'VALUES (?a ?p) { (<alice> <p1>) (<frank> UNDEF) } }',
+    'SELECT ?a ?c WHERE { VALUES ?a { <frank> <eve> } '
+    'OPTIONAL { ?a <city> ?c } }',
+    'SELECT ?x WHERE { VALUES ?x { <p1> <paris> } '
+    '{ { ?y <likes> ?x } UNION { ?y <city> ?x } } }',
+    'SELECT ?a WHERE { VALUES ?a { <tokyo> } ?a <knows> ?b }',
 ]
 
 
@@ -434,6 +448,45 @@ def test_mixed_space_variable_rejected(graph):
             d), d)
     # predicate-only variables remain fine
     compile_query(parse_query('SELECT ?a ?v ?b WHERE { ?a ?v ?b }', d), d)
+
+
+def test_values_forms_and_errors(graph):
+    store, d = graph
+    ep = SparqlEndpoint(store, d)
+    # single-var and grouped forms constrain identically
+    single = ep.query('SELECT ?a ?b WHERE { VALUES ?a { <alice> } '
+                      '?a <knows> ?b }')
+    grouped = ep.query('SELECT ?a ?b WHERE { VALUES (?a) { (<alice>) } '
+                       '?a <knows> ?b }')
+    assert table_multiset(single) == table_multiset(grouped)
+    assert {r[0] for r in single.rows()} == {"alice"}
+    # an UNDEF cell is compatible with every binding of that variable
+    undef = ep.query('SELECT ?a ?b WHERE { '
+                     'VALUES (?a ?b) { (<alice> UNDEF) } ?a <knows> ?b }')
+    assert table_multiset(undef) == table_multiset(single)
+    # empty VALUES block: joins everything away
+    assert ep.query('SELECT ?a WHERE { VALUES ?a { } ?a <knows> ?b }'
+                    ).num_matches == 0
+    # VALUES rows multiply like any multiset operand (duplicate row)
+    dup = ep.query('SELECT ?a ?b WHERE { VALUES ?a { <alice> <alice> } '
+                   '?a <knows> ?b }')
+    assert dup.num_matches == 2 * single.num_matches
+    assert ep.stats.values_joins > 0
+    for bad in [
+            # unknown entity: same contract as triple constants
+            'SELECT ?a WHERE { VALUES ?a { <nobody> } ?a <knows> ?b }',
+            # arity mismatch between the var list and a row
+            'SELECT ?a WHERE { VALUES (?a ?b) { (<alice>) } }',
+            # duplicate variable in the var list
+            'SELECT ?a WHERE { VALUES (?a ?a) { (<alice> <bob>) } }',
+            # no variables at all
+            'SELECT ?a WHERE { VALUES { <alice> } ?a <knows> ?b }',
+            # unterminated block
+            'SELECT ?a WHERE { VALUES ?a { <alice> ',
+            # VALUES var used in predicate position: space mismatch
+            'SELECT ?a WHERE { VALUES ?v { <alice> } ?a ?v ?b }']:
+        with pytest.raises(ParseError):
+            ep.parse(bad)
 
 
 def test_result_memo_byte_bound(graph):

@@ -261,3 +261,88 @@ def test_ingest_oracle_equivalence_hammer(graph, backend, kind):
     for _, q in [(0, parse_sparql(t, g.dictionary)) for t in texts]:
         assert sol_rows(sys_.engine.execute(store, q)) \
             == sol_rows(sys_.engine.execute(rebuilt, q))
+
+
+# -- window-level write coalescing (admission follow-on (b)) ------------------
+
+
+@pytest.mark.parametrize("kind", STORE_KINDS)
+def test_update_many_coalesces_to_one_commit(graph, kind):
+    g = graph
+    store = fresh_store(g, kind)
+    sys_ = make_system(g, store)
+    ep = SparqlEndpoint.from_system(sys_)
+    epoch0 = sys_.placement_epoch
+    texts = [f"INSERT DATA {{ <coalU{i}> <likes> <Product{i % 3}> }}"
+             for i in range(6)]
+    outs = ep.update_many(texts)
+    assert all(isinstance(o, dict) for o in outs)
+    assert all(o["inserted"] == 1 and o["coalesced"] == 6 for o in outs)
+    # ONE cloud commit + ONE propagation round for the whole group: the
+    # ingest path ran once, so every ack carries the same placement epoch
+    assert ep.write_commits == 1
+    assert len({o["placement_epoch"] for o in outs}) == 1
+    assert sys_.placement_epoch <= epoch0 + 1
+    # every inserted row is queryable
+    for i in range(6):
+        assert ep.query(f"SELECT ?p WHERE {{ <coalU{i}> <likes> ?p }}"
+                        ).num_matches == 1
+
+
+@pytest.mark.parametrize("kind", STORE_KINDS)
+def test_update_many_order_isolation_and_parity(graph, kind):
+    g = graph
+    store = fresh_store(g, kind)
+    ep = SparqlEndpoint(store, g.dictionary)
+    texts = [
+        "INSERT DATA { <wA> <likes> <Product0> . <wB> <likes> <Product1> }",
+        "DELETE DATA { <wA> <likes> <Product0> }",     # cancels half of #0
+        "INSERT DATA { <wA> <likes> <Product0> }",     # re-adds it
+        "NOT AN UPDATE {",                             # isolated failure
+        "DELETE WHERE { <wB> ?p ?o }",                 # flushes, runs solo
+        "DELETE DATA { <wNever> <likes> <Product0> }",  # unknown: no-op
+    ]
+    outs = ep.update_many(texts)
+    assert outs[0]["inserted"] == 2
+    assert outs[1]["deleted"] == 1      # the row was effectively present
+    assert outs[2]["inserted"] == 1     # and absent again at position 2
+    assert isinstance(outs[3], ParseError)
+    assert outs[4]["deleted"] == 1      # sees the flushed group's <wB> row
+    assert outs[5]["deleted"] == 0 and outs[5]["dropped_rows"] == 1
+    # sequential replay on a fresh copy lands on the same content
+    seq_store = fresh_store(g, kind)
+    ep_seq = SparqlEndpoint(seq_store, g.dictionary)
+    for t in texts:
+        try:
+            ep_seq.update(t)
+        except ParseError:
+            pass
+    assert np.array_equal(np.unique(np.asarray(store.triples()), axis=0),
+                          np.unique(np.asarray(seq_store.triples()), axis=0))
+
+
+def test_admission_queue_coalesce_writes_stats(graph):
+    from repro.runtime.admission import AdmissionQueue
+    g = graph
+    store = fresh_store(g, "mono")
+    ep = SparqlEndpoint(store, g.dictionary)
+    n = 5
+    texts = [f"INSERT DATA {{ <qU{i}> <follows> <User0> }}"
+             for i in range(n)]
+    with AdmissionQueue(ep, window_s=0.2, max_batch=64,
+                        coalesce_writes=True) as q:
+        tickets = [q.submit(t) for t in texts]
+        acks = [t.result(10.0) for t in tickets]
+    assert all(a["inserted"] == 1 for a in acks)
+    # the window's writes took one commit; the rest were amortized away
+    assert q.stats.updates_served == n
+    assert q.stats.write_commits == 1
+    assert q.stats.writes_coalesced == n - 1
+    assert q.stats.recent[-1].write_commits == 1
+    sd = q.stats.as_dict()
+    assert sd["writes_coalesced"] == n - 1
+    # reads in the same window still see the pre-window store: covered by
+    # the existing serving tests; here just confirm the rows landed
+    for i in range(n):
+        assert ep.query(f"SELECT ?x WHERE {{ <qU{i}> <follows> ?x }}"
+                        ).num_matches == 1
