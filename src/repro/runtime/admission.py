@@ -240,6 +240,7 @@ class AdmissionQueue:
         self._cond = threading.Condition()
         self._closed = False
         self._seq = 0
+        self._batch_log: list | None = None
         self._dispatcher = threading.Thread(
             target=self._dispatch_loop, name="admission-dispatcher",
             daemon=True)
@@ -295,6 +296,22 @@ class AdmissionQueue:
     def depth(self) -> int:
         with self._cond:
             return len(self._queue)
+
+    def start_batch_log(self) -> list:
+        """Capture every subsequent :class:`BatchStats` into the returned
+        list until :meth:`stop_batch_log`. Unlike ``stats.recent`` (a
+        ring trimmed to the last 64 batches) the log grows without bound,
+        so a measurement window spanning many dispatch windows — e.g.
+        ``workload.replay`` — sees its full batch trajectory. Starting a
+        new log replaces any previous one."""
+        log: list = []
+        self._batch_log = log
+        return log
+
+    def stop_batch_log(self) -> None:
+        """Stop capturing batches; the list from :meth:`start_batch_log`
+        keeps whatever was captured."""
+        self._batch_log = None
 
     def close(self, drain: bool = True, timeout: float = 10.0) -> None:
         """Stop admitting. ``drain=True`` serves already-queued tickets
@@ -428,15 +445,25 @@ class AdmissionQueue:
                     ticket._resolve(table)
         served_updates = 0
         if updates and self.coalesce_writes:
-            outs = ep.update_many([t.text for t in updates])
-            for t, out in zip(updates, outs):
-                if isinstance(out, BaseException):
-                    t._reject(out)
-                    self.stats.failed += 1
-                else:
-                    t.batch_seq = seq
-                    t._resolve(out)
-                    served_updates += 1
+            try:
+                outs = ep.update_many([t.text for t in updates])
+            except Exception as err:
+                # an exception escaping the coalesced commit must not
+                # strand the window's tickets unresolved (clients poll
+                # ticket.done() forever) — reject them all, mirroring
+                # the read path
+                for t in updates:
+                    t._reject(err)
+                self.stats.failed += len(updates)
+            else:
+                for t, out in zip(updates, outs):
+                    if isinstance(out, BaseException):
+                        t._reject(out)
+                        self.stats.failed += 1
+                    else:
+                        t.batch_seq = seq
+                        t._resolve(out)
+                        served_updates += 1
         else:
             for t in updates:
                 try:
@@ -476,6 +503,9 @@ class AdmissionQueue:
             objective=objective)
         self.stats.recent.append(bs)
         del self.stats.recent[:-_RECENT_BATCHES]
+        log = self._batch_log
+        if log is not None:
+            log.append(bs)
 
 
 def _np_unique(assignments):

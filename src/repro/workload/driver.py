@@ -113,7 +113,14 @@ def replay(queue, schedule, *, speed: float = 1.0,
     if verify is None:
         verify = schedule.verifiable
     events = sorted(schedule.events, key=lambda e: e.at_s)
-    batches0 = len(queue.stats.recent)
+    # trajectory capture: an unbounded batch log when the queue offers
+    # one (stats.recent is a ring trimmed to the last 64 batches, far
+    # fewer than a long replay's dispatch windows); otherwise fall back
+    # to seq-filtering the ring, which at least never misattributes
+    # pre-replay batches
+    batch_log = (queue.start_batch_log()
+                 if hasattr(queue, "start_batch_log") else None)
+    seq0 = max((bs.seq for bs in queue.stats.recent), default=-1)
     per_shape: dict[str, ClassReport] = {}
     per_temp = {"cold": ClassReport(), "warm": ClassReport()}
     writes = ClassReport()
@@ -128,7 +135,10 @@ def replay(queue, schedule, *, speed: float = 1.0,
             report = per_shape.setdefault(event.shape, ClassReport())
         try:
             value = ticket.result(timeout=0)
-        except BaseException:
+        except Exception:
+            # ticket rejection payloads are Exceptions; let
+            # KeyboardInterrupt/SystemExit propagate so long replays
+            # stay interruptible
             report.errors += 1
             if event.kind == "query":
                 per_temp["cold" if event.cold else "warm"].errors += 1
@@ -158,40 +168,48 @@ def replay(queue, schedule, *, speed: float = 1.0,
             settle(now, it)
 
     start = time.monotonic()
-    for event in events:
-        due = start + event.at_s / speed
-        while True:
-            now = time.monotonic()
-            if now >= due:
-                break
-            drain_done(now)
-            time.sleep(max(0.0, min(0.001, due - time.monotonic())))
-        try:
-            ticket = queue.submit(event.text)
-        except Exception:
-            # admission-level refusal (full queue / parse error): count
-            # against the event's class, keep replaying
-            report = (writes if event.kind == "update"
-                      else per_shape.setdefault(event.shape,
-                                                ClassReport()))
-            report.errors += 1
-            if event.kind == "query":
-                per_temp["cold" if event.cold else "warm"].errors += 1
-            continue
-        pending.append((event, due, ticket))
-    while pending:
-        drain_done(time.monotonic())
-        if pending:
-            time.sleep(0.0005)
+    try:
+        for event in events:
+            due = start + event.at_s / speed
+            while True:
+                now = time.monotonic()
+                if now >= due:
+                    break
+                drain_done(now)
+                time.sleep(max(0.0, min(0.001,
+                                        due - time.monotonic())))
+            try:
+                ticket = queue.submit(event.text)
+            except Exception:
+                # admission-level refusal (full queue / parse error):
+                # count against the event's class, keep replaying
+                report = (writes if event.kind == "update"
+                          else per_shape.setdefault(event.shape,
+                                                    ClassReport()))
+                report.errors += 1
+                if event.kind == "query":
+                    per_temp["cold" if event.cold
+                             else "warm"].errors += 1
+                continue
+            pending.append((event, due, ticket))
+        while pending:
+            drain_done(time.monotonic())
+            if pending:
+                time.sleep(0.0005)
+    finally:
+        if batch_log is not None:
+            queue.stop_batch_log()
     wall = time.monotonic() - start
 
+    batches = (batch_log if batch_log is not None
+               else [bs for bs in queue.stats.recent if bs.seq > seq0])
     trajectory = [
         {"seq": bs.seq, "size": bs.size,
          "memo_hits": bs.memo_hits,
          "engine_cache_hits": bs.engine_cache_hits,
          "scans_deduped": bs.scans_deduped,
          "write_commits": bs.write_commits}
-        for bs in queue.stats.recent[batches0:]]
+        for bs in batches]
     shape_totals = list(per_shape.values()) + [writes]
     return ReplayReport(
         wall_s=wall,

@@ -13,8 +13,11 @@ schedules, so A/B benchmark arms replay the *same* traffic:
   compulsory cache misses; an exhausted reserve falls back to the hot
   pool.
 - **Arrivals**: open-loop ``poisson`` (exponential inter-arrivals at
-  ``qps``) or ``burst`` (the same, but a ``burst_fraction`` of wall time
-  runs at ``burst_factor × qps`` in periodic burst windows).
+  ``qps``) or ``burst`` — an inhomogeneous Poisson process where a
+  ``burst_fraction`` of wall time runs at ``burst_factor × qps`` in
+  periodic burst windows and the off-window rate compensates so the
+  overall mean stays ``qps`` (with the defaults the off-window rate is
+  exactly 0: all traffic lands in the bursts).
 - **Writes**: a ``write_fraction`` of events are SPARQL UPDATEs
   synthesized against the same store. Style ``"churn"`` inserts (and
   later deletes) triples on a dedicated *churn predicate* with fresh
@@ -60,7 +63,8 @@ class TrafficConfig:
         if self.write_style not in WRITE_STYLES:
             raise ValueError(f"unknown write_style {self.write_style!r}; "
                              f"expected one of {WRITE_STYLES}")
-        for name in ("duration_s", "qps"):
+        for name in ("duration_s", "qps", "burst_factor",
+                     "burst_period_s"):
             if getattr(self, name) <= 0:
                 raise ValueError(f"{name} must be > 0")
         for name in ("cold_fraction", "write_fraction", "burst_fraction"):
@@ -119,22 +123,41 @@ class Schedule:
 
 
 def _arrival_times(cfg: TrafficConfig, rng: np.random.Generator) -> list:
-    """Open-loop arrival offsets in [0, duration_s), sorted."""
+    """Open-loop arrival offsets in [0, duration_s), sorted.
+
+    ``burst`` is a piecewise-constant inhomogeneous Poisson process,
+    simulated by *thinning*: sample a homogeneous process at the peak
+    rate and accept each candidate with probability ``rate(t) / peak``.
+    (Stepping one exponential at the rate of the current instant is NOT
+    equivalent — a draw taken at a low off-window rate can overshoot
+    every later burst window entirely.)
+    """
+    if cfg.arrival == "burst":
+        burst_rate = cfg.qps * cfg.burst_factor
+        window = cfg.burst_fraction * cfg.burst_period_s
+        if cfg.burst_fraction >= 1.0:
+            off_rate = 0.0           # degenerate: always in-burst anyway
+        else:
+            # chosen so burst_fraction·burst + (1-burst_fraction)·off
+            # averages back to qps; clamps at 0 when the bursts alone
+            # already carry the full mean load
+            off_rate = cfg.qps * max(
+                0.0, (1.0 - cfg.burst_factor * cfg.burst_fraction)
+                / (1.0 - cfg.burst_fraction))
+        peak = max(burst_rate, off_rate)
+    else:
+        peak = cfg.qps
     times: list[float] = []
     t = 0.0
     while True:
-        if cfg.arrival == "burst":
-            phase = t % cfg.burst_period_s
-            in_burst = phase < cfg.burst_fraction * cfg.burst_period_s
-            rate = cfg.qps * (cfg.burst_factor if in_burst else
-                              max(1e-9, (1.0 - cfg.burst_factor
-                                         * cfg.burst_fraction)
-                              / max(1e-9, 1.0 - cfg.burst_fraction)))
-        else:
-            rate = cfg.qps
-        t += float(rng.exponential(1.0 / rate))
+        t += float(rng.exponential(1.0 / peak))
         if t >= cfg.duration_s:
             return times
+        if cfg.arrival == "burst":
+            rate = (burst_rate if t % cfg.burst_period_s < window
+                    else off_rate)
+            if rng.random() * peak >= rate:
+                continue
         times.append(t)
 
 

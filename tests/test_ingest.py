@@ -346,3 +346,26 @@ def test_admission_queue_coalesce_writes_stats(graph):
     for i in range(n):
         assert ep.query(f"SELECT ?x WHERE {{ <qU{i}> <follows> ?x }}"
                         ).num_matches == 1
+
+
+def test_admission_queue_coalesce_commit_failure_rejects_window(graph):
+    from repro.runtime.admission import AdmissionQueue
+    g = graph
+    store = fresh_store(g, "mono")
+    ep = SparqlEndpoint(store, g.dictionary)
+
+    def boom(texts):
+        raise RuntimeError("fold bug")
+
+    ep.update_many = boom
+    with AdmissionQueue(ep, window_s=0.05, max_batch=64,
+                        coalesce_writes=True) as q:
+        tickets = [q.submit(f"INSERT DATA {{ <qF{i}> <follows> <User0> }}")
+                   for i in range(3)]
+        # an exception escaping the coalesced commit must reject every
+        # ticket of the window, not strand them unresolved forever
+        for t in tickets:
+            with pytest.raises(RuntimeError, match="fold bug"):
+                t.result(5.0)
+    assert q.stats.failed == 3
+    assert q.stats.updates_served == 0

@@ -33,8 +33,9 @@ from repro.sparql.algebra import compile_query, evaluate_plan
 from repro.sparql.endpoint import SparqlEndpoint
 from repro.sparql.engine import QueryEngine
 from repro.sparql.query import parse_query
-from repro.workload import (PatternSampler, SampledQuery, ShapeConfig,
-                            TrafficConfig, build_schedule, replay)
+from repro.workload import (PatternSampler, SampledQuery, Schedule,
+                            ScheduledEvent, ShapeConfig, TrafficConfig,
+                            build_schedule, replay)
 from repro.workload.sampler import SHAPES
 
 BACKENDS = ["numpy", "jax"]
@@ -264,6 +265,41 @@ def test_arrivals_within_duration_and_sorted(templates):
         assert len(ts) > 0
 
 
+def test_burst_arrivals_land_in_every_burst_window(templates):
+    # default burst shape: burst_factor * burst_fraction == 1, so the
+    # compensating off-window rate is exactly 0 — every arrival must
+    # fall inside a burst window, every period must get a burst, and
+    # the overall mean must stay ~qps (regression: stepping one
+    # exponential at the instantaneous rate collapsed the whole
+    # schedule into a single initial burst)
+    cfg = TrafficConfig(duration_s=1.0, qps=200, arrival="burst",
+                        burst_factor=4.0, burst_fraction=0.25,
+                        burst_period_s=0.25, seed=9)
+    sched = build_schedule(templates, cfg)
+    ts = np.array([e.at_s for e in sched.events])
+    assert 140 <= len(ts) <= 260                  # ~Poisson(200)
+    window = cfg.burst_fraction * cfg.burst_period_s
+    assert np.all(ts % cfg.burst_period_s < window)
+    periods = set((ts // cfg.burst_period_s).astype(int).tolist())
+    assert periods == {0, 1, 2, 3}
+
+
+def test_burst_arrivals_partial_offload(templates):
+    # burst_factor * burst_fraction < 1: off-window traffic exists but
+    # burst windows still run burst_factor/off_factor times hotter
+    cfg = TrafficConfig(duration_s=2.0, qps=300, arrival="burst",
+                        burst_factor=2.0, burst_fraction=0.25,
+                        burst_period_s=0.25, seed=9)
+    sched = build_schedule(templates, cfg)
+    ts = np.array([e.at_s for e in sched.events])
+    assert 480 <= len(ts) <= 720                  # mean stays ~qps
+    window = cfg.burst_fraction * cfg.burst_period_s
+    in_burst = int(np.sum(ts % cfg.burst_period_s < window))
+    # expected in-window share: 2.0*0.25 / (2.0*0.25 + (2/3)*0.75) = 0.5
+    assert 0.4 <= in_burst / len(ts) <= 0.6
+    assert in_burst < len(ts)                     # off-window arrivals too
+
+
 def test_write_styles(graph, templates):
     store, d = graph
     churn = build_schedule(templates, TrafficConfig(
@@ -323,6 +359,63 @@ def test_replay_read_only_verifies_every_answer(graph, templates):
     assert p["cold"].count + p["warm"].count == sched.n_queries
     as_dict = rep.as_dict()
     assert as_dict["admission"]["completed"] >= rep.completed
+
+
+def test_replay_trajectory_spans_all_batches(graph, templates):
+    # the warmup curve must cover EVERY replay dispatch window, not just
+    # the last 64 that stats.recent retains — and must exclude batches
+    # dispatched before the replay started
+    store, d = graph
+    ep = SparqlEndpoint(store, d)
+    q0 = templates[0]
+    events = [ScheduledEvent(at_s=0.0, kind="query", text=q0.text,
+                             template=q0.name, shape=q0.shape,
+                             cardinality=q0.cardinality)
+              for _ in range(80)]
+    sched = Schedule(events=events, config=TrafficConfig(),
+                     templates=[q0])
+    with AdmissionQueue(ep, window_s=0.0, max_batch=1) as q:
+        q.query(q0.text)                         # pre-replay batch seq 0
+        rep = replay(q, sched, speed=1000.0)
+    assert rep.completed == 80 and rep.errors == 0
+    assert len(q.stats.recent) <= 64             # the ring trimmed
+    assert len(rep.cache_trajectory) == 80       # ...but replay saw all
+    seqs = [b["seq"] for b in rep.cache_trajectory]
+    assert seqs == sorted(seqs) and seqs[0] >= 1
+
+
+def test_replay_stays_interruptible():
+    # KeyboardInterrupt raised while harvesting a ticket must propagate,
+    # not be swallowed as a per-query error
+    class FakeTicket:
+        def done(self):
+            return True
+
+        def result(self, timeout=None):
+            raise KeyboardInterrupt
+
+    class FakeStats:
+        recent: list = []
+        assignment_counts: dict = {}
+
+        def as_dict(self):
+            return {}
+
+    class FakeQueue:
+        stats = FakeStats()
+
+        def submit(self, text):
+            return FakeTicket()
+
+    q0 = SampledQuery(name="t0", shape="star", text="SELECT * WHERE {}",
+                      cardinality=1, n_patterns=1, n_consts=0, pids=(0,),
+                      decoration=None, store_version=0)
+    sched = Schedule(events=[ScheduledEvent(
+        at_s=0.0, kind="query", text=q0.text, template=q0.name,
+        shape=q0.shape, cardinality=q0.cardinality)],
+        config=TrafficConfig(), templates=[q0])
+    with pytest.raises(KeyboardInterrupt):
+        replay(FakeQueue(), sched, speed=1000.0)
 
 
 def test_replay_churn_mix_stays_verified_with_coalescing(graph,
